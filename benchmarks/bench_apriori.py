@@ -1,0 +1,35 @@
+"""B1 — paper §V: 3-step MapReduce Apriori, scaling with DB size and tiles.
+
+Emits ``name,us_per_call,derived`` CSV rows; derived = itemsets found.
+"""
+import time
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.itemsets import apriori
+from repro.core.mapreduce import SimulatedCluster
+from repro.core.scheduler import MBScheduler
+from repro.data.baskets import BasketConfig, generate_baskets, pad_items
+
+
+def run(csv_rows):
+    profile = HeterogeneityProfile.paper()
+    for n_tx in (2048, 8192, 32768):
+        T = pad_items(generate_baskets(BasketConfig(n_tx=n_tx, n_items=96, seed=1)))
+        cluster = SimulatedCluster(profile, MBScheduler(profile, "lpt"))
+        t0 = time.perf_counter()
+        res = apriori(T, max(2, int(0.02 * n_tx)), cluster=cluster, n_tiles=32)
+        wall = (time.perf_counter() - t0) * 1e6
+        sim = sum(rep.makespan for _, rep in res.reports)
+        csv_rows.append((f"apriori_ntx{n_tx}", wall, len(res.supports)))
+        csv_rows.append((f"apriori_ntx{n_tx}_sim_makespan_us", sim * 1e6,
+                         res.levels))
+    # tile-count scaling at fixed size (parallelism sweep)
+    T = pad_items(generate_baskets(BasketConfig(n_tx=8192, n_items=96, seed=1)))
+    for tiles in (4, 16, 64):
+        cluster = SimulatedCluster(profile, MBScheduler(profile, "lpt"))
+        res = apriori(T, 164, cluster=cluster, n_tiles=tiles)
+        sim = sum(rep.makespan for _, rep in res.reports)
+        csv_rows.append((f"apriori_tiles{tiles}_sim_makespan_us", sim * 1e6,
+                         len(res.supports)))

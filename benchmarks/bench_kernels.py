@@ -1,0 +1,69 @@
+"""B4 — hot-spot kernels: Pallas (interpret on CPU) vs jnp oracle µs/call,
+plus the projected TPU-v5e roofline time for the same shape.
+
+derived = oracle_us / kernel_us (CPU interpret — correctness-path timing),
+and for *_roofline rows, the projected µs on TPU v5e.
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.support_count.ops import support_count
+from repro.kernels.support_count.ref import support_count_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _time(f, *args, reps=3):
+    f(*args)                        # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+
+    # support_count: N=4096 tx, I=256 items, M=512 candidates
+    N, I, M = 4096, 256, 512
+    T = jnp.asarray((rng.random((N, I)) < 0.3).astype(np.uint8))
+    C = np.zeros((M, I), np.uint8)
+    for m in range(M):
+        C[m, rng.choice(I, 3, replace=False)] = 1
+    C = jnp.asarray(C)
+    t_ref = _time(jax.jit(support_count_ref), T, C)
+    t_pal = _time(lambda a, b: support_count(a, b), T, C)
+    csv_rows.append(("support_count_ref_us", t_ref, 1.0))
+    csv_rows.append(("support_count_pallas_interp_us", t_pal, t_ref / t_pal))
+    flops = 2.0 * N * I * M
+    t_tpu = max(flops / PEAK_FLOPS, (N * I + M * I + M * 4) / HBM_BW) * 1e6
+    csv_rows.append(("support_count_tpu_roofline_us", t_tpu, flops / 1e9))
+
+    # flash attention fwd: B1 S1024 H8 hd64 (oracle timing + roofline)
+    B, S, H, hd = 1, 1024, 8, 64
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.bfloat16)
+    t_ref = _time(jax.jit(lambda q: flash_attention_ref(q, q, q)), q)
+    csv_rows.append(("flash_attn_ref_us", t_ref, 1.0))
+    flops = 4.0 * B * H * S * S * hd
+    bytes_flash = 4 * B * S * H * hd * 2
+    csv_rows.append(("flash_attn_tpu_roofline_us",
+                     max(flops / PEAK_FLOPS, bytes_flash / HBM_BW) * 1e6,
+                     flops / 1e9))
+
+    # wkv6: B1 T512 H4 n64
+    Bw, Tw, Hw, n = 1, 512, 4, 64
+    r = jnp.asarray(rng.standard_normal((Bw, Tw, Hw, n)) * 0.5, jnp.float32)
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((Bw, Tw, Hw, n)))), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((Hw, n)), jnp.float32)
+    t_ref = _time(jax.jit(lambda r, w, u: wkv6_ref(r, r, r, w, u)[0]), r, w, u)
+    csv_rows.append(("wkv6_ref_scan_us", t_ref, 1.0))
+    flops = Bw * Tw * Hw * (4 * n * n)
+    state_bytes = Bw * Tw * Hw * n * 4 * 4
+    csv_rows.append(("wkv6_tpu_roofline_us",
+                     max(flops / PEAK_FLOPS, state_bytes / HBM_BW) * 1e6,
+                     flops / 1e9))

@@ -1,0 +1,47 @@
+"""B5 — §Roofline reader: aggregates results/dryrun/*.json into the
+per-(arch × shape × mesh) three-term table.
+
+derived = roofline fraction (useful model flops at peak / dominant term).
+"""
+import glob
+import json
+import os
+
+
+def load_records(out_dir="results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            recs.append(r)
+    return recs
+
+
+def run(csv_rows):
+    recs = load_records()
+    for r in recs:
+        rl = r["roofline"]
+        name = f"roofline_{r['arch']}_{r['shape']}_{r.get('mesh_mode','pod')}"
+        bound_s = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        csv_rows.append((name, bound_s * 1e6, rl["roofline_fraction"]))
+
+
+def table(out_dir="results/dryrun", profile=None):
+    recs = load_records(out_dir)
+    if profile:
+        recs = [r for r in recs if r.get("profile") == profile]
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": r.get("mesh_mode", "?"), "profile": r.get("profile"),
+            "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+            "collective_s": rl["collective_s"], "dominant": rl["dominant"],
+            "useful": rl["useful_ratio"], "frac": rl["roofline_fraction"],
+            "mem_gb": r["memory"]["peak_estimate_bytes"] / 1e9,
+            "coll_bytes": r["collectives"]["total_bytes"],
+            "flops_pd": r["cost"]["flops"],
+        })
+    return rows

@@ -1,0 +1,37 @@
+"""B2 — paper §V/§VI: MB Scheduler vs naive equal split on the paper's
+80/120/200/400 four-core system (and pod-scale straggler profiles).
+
+derived = speedup over equal split.
+"""
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.scheduler import MBScheduler, TaskSpec
+
+
+def _makespan(profile, policy, costs):
+    t = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    return MBScheduler(profile, policy).assign_parallel(t, costs).makespan
+
+
+def run(csv_rows):
+    rng = np.random.default_rng(0)
+    scenarios = {
+        "paper4core": (HeterogeneityProfile.paper(), np.full(80, 10.0)),
+        "paper4core_skewed": (HeterogeneityProfile.paper(),
+                              rng.zipf(1.6, 80).astype(float)),
+        "pod_straggler8": (HeterogeneityProfile.straggler(8, 1, 4.0),
+                           np.full(64, 10.0)),
+        "pod_straggler256": (HeterogeneityProfile.straggler(256, 8, 3.0),
+                             np.full(2048, 10.0)),
+        "mixed_gen": (HeterogeneityProfile.mixed_generation(128, 128, 2.35),
+                      np.full(2048, 10.0)),
+    }
+    for name, (profile, costs) in scenarios.items():
+        m_eq = _makespan(profile, "equal", costs)
+        m_prop = _makespan(profile, "proportional", costs)
+        m_lpt = _makespan(profile, "lpt", costs)
+        csv_rows.append((f"sched_{name}_equal_us", m_eq * 1e6, 1.0))
+        csv_rows.append((f"sched_{name}_proportional_us", m_prop * 1e6,
+                         m_eq / m_prop))
+        csv_rows.append((f"sched_{name}_lpt_us", m_lpt * 1e6, m_eq / m_lpt))

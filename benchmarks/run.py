@@ -1,0 +1,48 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (DESIGN.md §7):
+
+  B1 bench_apriori    — 3-step MapReduce Apriori scaling (paper §V)
+  B2 bench_scheduler  — MB Scheduler vs equal split, 80/120/200/400 + pods
+  B3 bench_power      — gating / switching energy (paper §VI)
+  B4 bench_kernels    — Pallas hot-spots vs jnp oracle + TPU roofline
+  B5 bench_roofline   — dry-run roofline table reader
+
+Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
+"""
+import argparse
+import sys
+
+from benchmarks import (bench_apriori, bench_kernels, bench_power,
+                        bench_roofline, bench_scheduler)
+
+SUITES = {
+    "B1": ("apriori", bench_apriori.run),
+    "B2": ("scheduler", bench_scheduler.run),
+    "B3": ("power", bench_power.run),
+    "B4": ("kernels", bench_kernels.run),
+    "B5": ("roofline", bench_roofline.run),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma list of suite ids")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else set(SUITES)
+
+    rows = []
+    for sid, (name, fn) in SUITES.items():
+        if sid not in only:
+            continue
+        try:
+            fn(rows)
+        except Exception as e:  # noqa: BLE001 — report, keep the harness alive
+            rows.append((f"{name}_FAILED", 0.0, 0.0))
+            print(f"# {sid} {name} failed: {e}", file=sys.stderr)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived:.4f}")
+
+
+if __name__ == "__main__":
+    main()

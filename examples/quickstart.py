@@ -1,0 +1,42 @@
+"""Quickstart: the paper's pipeline in 30 lines.
+
+Generates a transactional database, mines association rules with the
+3-step MapReduce Apriori under the MB Scheduler on the paper's
+heterogeneous 80/120/200/400 four-core system, and compares the makespan
+against a naive Hadoop-style equal split.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.itemsets import apriori
+from repro.core.mapreduce import SimulatedCluster
+from repro.core.power import PowerModel
+from repro.core.rules import generate_rules
+from repro.core.scheduler import MBScheduler
+from repro.data.baskets import BasketConfig, generate_baskets, pad_items
+
+# 1. transactional data (IBM-Quest-style synthetic store data)
+T = pad_items(generate_baskets(BasketConfig(n_tx=4096, n_items=96, seed=42)))
+
+# 2. the paper's system: 4 heterogeneous cores, MB Scheduler, power model
+profile = HeterogeneityProfile.paper()            # 80 / 120 / 200 / 400
+results = {}
+for policy in ("equal", "proportional", "lpt"):
+    cluster = SimulatedCluster(profile, MBScheduler(profile, policy),
+                               power=PowerModel.cpu(profile))
+    res = apriori(T, min_support=80, cluster=cluster, n_tiles=32)
+    makespan = sum(rep.makespan for _, rep in res.reports)
+    energy = sum(rep.energy_j or 0 for _, rep in res.reports)
+    results[policy] = (makespan, energy, res)
+    print(f"{policy:13s} makespan={makespan:.4f}s  energy={energy:.1f}J  "
+          f"itemsets={len(res.supports)}")
+
+speedup = results["equal"][0] / results["lpt"][0]
+print(f"\nMB Scheduler speedup over equal split: {speedup:.2f}x "
+      f"(paper's analytic bound for this core mix: 2.50x)")
+
+# 3. association rules (paper step 3)
+rules = generate_rules(results["lpt"][2], min_confidence=0.65)
+print(f"\ntop rules (of {len(rules)}):")
+for r in rules[:8]:
+    print("  ", r)

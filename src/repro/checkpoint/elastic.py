@@ -1,0 +1,56 @@
+"""Elastic resize: resume a checkpoint on a different mesh.
+
+The store keeps unsharded logical arrays, so elasticity reduces to (a)
+validating the new mesh still divides every sharded dim, (b) device_put with
+the new shardings, and (c) re-planning data shards via the MB scheduler.
+This is the pod-scale version of the paper's "switch off the unused cores":
+a shrink from (16,16) to (8,16) gates 128 chips, and the restored job
+continues with re-proportioned work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint import store
+from repro.configs.base import ModelConfig
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.sharding import BatchPlan, plan_batches
+from repro.distributed import meshes
+
+
+@dataclass
+class ResizePlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    gated_chips: int
+    batch_plan: Optional[BatchPlan] = None
+
+    @property
+    def is_shrink(self) -> bool:
+        return int(np.prod(self.new_shape)) < int(np.prod(self.old_shape))
+
+
+def plan_resize(old_mesh: Mesh, new_mesh: Mesh, global_batch: int,
+                microbatch: int, profile: Optional[HeterogeneityProfile] = None
+                ) -> ResizePlan:
+    old_n = int(np.prod(list(old_mesh.shape.values())))
+    new_n = int(np.prod(list(new_mesh.shape.values())))
+    ndp = int(np.prod([new_mesh.shape[a] for a in meshes.batch_axes(new_mesh)]))
+    prof = profile or HeterogeneityProfile.homogeneous(ndp)
+    bp = plan_batches(prof, global_batch, microbatch)
+    return ResizePlan(tuple(old_mesh.shape.values()), tuple(new_mesh.shape.values()),
+                      gated_chips=max(old_n - new_n, 0), batch_plan=bp)
+
+
+def restore_elastic(ckpt_dir: str, like: Any, cfg: ModelConfig,
+                    new_mesh: Mesh, step: Optional[int] = None):
+    """Restore `like`-shaped state re-sharded onto `new_mesh`."""
+    specs = meshes.param_pspecs(cfg, like, new_mesh)
+    shardings = meshes.named(specs, new_mesh)
+    return store.restore(ckpt_dir, like, step=step, shardings=shardings)

@@ -1,0 +1,118 @@
+"""Checkpoint store: atomic, manifest-driven, zstd-compressed msgpack.
+
+Layout:
+  <dir>/step_000123/
+    manifest.json            # tree structure, shapes, dtypes, step, config id
+    arrays.msgpack.zst       # flat {key: bytes} in deterministic order
+  <dir>/LATEST               # atomically-updated pointer (two-phase commit)
+
+Restore is mesh-agnostic: arrays come back as numpy and are re-sharded by
+``device_put`` against whatever mesh the restoring job runs (elastic resize
+— the paper's "switch off cores" — is therefore free at the checkpoint
+layer; see checkpoint/elastic.py for the plan validation).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+import jax
+import jax.numpy as jnp
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = leaf
+    return flat, jax.tree_util.tree_structure(tree)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+    flat, _ = _flatten(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = step_dir + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+
+    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+    payload: Dict[str, bytes] = {}
+    for key in sorted(flat):
+        arr = np.asarray(flat[key])
+        # bfloat16 has no numpy wire format -> store as uint16 view + tag
+        tag = str(arr.dtype)
+        if tag == "bfloat16":
+            arr = arr.view(np.uint16)
+        manifest["arrays"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype),
+                                   "orig_dtype": tag}
+        payload[key] = arr.tobytes()
+
+    comp = zstd.ZstdCompressor(level=3)
+    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
+        f.write(comp.compress(msgpack.packb(payload)))
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # two-phase commit: rename dir, then flip LATEST
+    if os.path.exists(step_dir):
+        shutil.rmtree(step_dir)
+    os.rename(tmp, step_dir)
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(os.path.basename(step_dir))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip().split("_")[-1])
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like` (shapes validated).  If
+    `shardings` (matching pytree of NamedSharding) is given, arrays are
+    device_put with them — the elastic re-shard path."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    dec = zstd.ZstdDecompressor()
+    with open(os.path.join(step_dir, "arrays.msgpack.zst"), "rb") as f:
+        payload = msgpack.unpackb(dec.decompress(f.read()))
+
+    flat_like, _ = _flatten(like)
+    flat_shard, _ = _flatten(shardings) if shardings is not None else ({}, None)
+    out = {}
+    for key, leaf in flat_like.items():
+        meta = manifest["arrays"][key]
+        raw = payload[key]
+        arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+        if meta["orig_dtype"] == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        if key in flat_shard:
+            out[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            out[key] = jnp.asarray(arr)
+    # rebuild tree in like's structure
+    leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    ordered = []
+    for path, _ in leaves_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        ordered.append(out[key])
+    return jax.tree_util.tree_unflatten(treedef, ordered), manifest["extra"]

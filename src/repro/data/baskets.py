@@ -1,0 +1,58 @@
+"""Synthetic transactional database (IBM Quest–style) for Market Basket
+Analysis, plus bitmap packing.
+
+Generates transactions from a pool of "purchase patterns" (correlated
+itemsets) mixed with Zipf-distributed noise, which yields the non-trivial
+association rules the paper mines.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BasketConfig:
+    n_tx: int = 4096
+    n_items: int = 128          # padded to a multiple of 128 for the kernel
+    n_patterns: int = 12
+    pattern_len: int = 4
+    pattern_prob: float = 0.35  # probability a tx includes a pattern
+    noise_items: int = 3
+    zipf_a: float = 1.5
+    seed: int = 0
+
+
+def generate_baskets(cfg: BasketConfig) -> np.ndarray:
+    """Returns T ∈ uint8[n_tx, n_items] with 0/1 entries."""
+    rng = np.random.default_rng(cfg.seed)
+    patterns = [rng.choice(cfg.n_items, size=cfg.pattern_len, replace=False)
+                for _ in range(cfg.n_patterns)]
+    T = np.zeros((cfg.n_tx, cfg.n_items), dtype=np.uint8)
+    for t in range(cfg.n_tx):
+        if rng.random() < cfg.pattern_prob:
+            pat = patterns[rng.integers(cfg.n_patterns)]
+            keep = rng.random(len(pat)) < 0.9          # occasionally drop one
+            T[t, pat[keep]] = 1
+        noise = rng.zipf(cfg.zipf_a, size=cfg.noise_items) % cfg.n_items
+        T[t, noise] = 1
+    return T
+
+
+def pad_items(T: np.ndarray, multiple: int = 128) -> np.ndarray:
+    """Pad the item axis to a lane-aligned multiple (kernel requirement)."""
+    n_tx, n_items = T.shape
+    pad = (-n_items) % multiple
+    if pad == 0:
+        return T
+    return np.pad(T, ((0, 0), (0, pad)))
+
+
+def pad_rows(T: np.ndarray, multiple: int = 8) -> np.ndarray:
+    n_tx, _ = T.shape
+    pad = (-n_tx) % multiple
+    if pad == 0:
+        return T
+    return np.pad(T, ((0, pad), (0, 0)))

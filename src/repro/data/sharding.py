@@ -1,0 +1,50 @@
+"""Heterogeneity-aware shard-size planning — the MB Scheduler applied to the
+LM data pipeline (DESIGN.md §2: "multi-threaded task → split ∝ core power").
+
+Given a device profile and a global batch, the planner assigns each
+data-parallel rank a microbatch *count* proportional to its measured
+throughput (counts, not sizes: every microbatch keeps the same static shape,
+so one compiled program serves all ranks — re-planning is a new integer
+vector, not a re-compile).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.scheduler import MBScheduler, TaskSpec
+
+
+@dataclass
+class BatchPlan:
+    microbatch: int                 # tokens dimension kept static
+    counts: np.ndarray              # [n_ranks] microbatches per rank per step
+    global_batch: int
+
+    @property
+    def step_batches(self) -> int:
+        return int(self.counts.sum())
+
+
+def plan_batches(profile: HeterogeneityProfile, global_batch: int,
+                 microbatch: int) -> BatchPlan:
+    """Split `global_batch` into microbatches of size `microbatch` and
+    assign counts ∝ speed (largest remainder, exact sum)."""
+    if global_batch % microbatch != 0:
+        raise ValueError(f"global_batch {global_batch} % microbatch {microbatch} != 0")
+    n_micro = global_batch // microbatch
+    sched = MBScheduler(profile, policy="proportional")
+    asg = sched.assign_parallel(
+        TaskSpec("batch-plan", float(n_micro), parallel=True, n_tiles=n_micro))
+    counts = np.array([len(ts) for ts in asg.tiles_of])
+    assert counts.sum() == n_micro
+    return BatchPlan(microbatch=microbatch, counts=counts,
+                     global_batch=global_batch)
+
+
+def replan(profile: HeterogeneityProfile, plan: BatchPlan) -> BatchPlan:
+    """Dynamic re-plan after EWMA throughput updates (core switching)."""
+    return plan_batches(profile, plan.global_batch, plan.microbatch)

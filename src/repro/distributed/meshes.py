@@ -1,0 +1,239 @@
+"""Mesh + named-sharding rules for every arch / pytree in the framework.
+
+Rules are name/path-based over the parameter pytree (leading layer-stack dim
+is handled by rank offset).  Every rule is divisibility-checked against the
+mesh — an axis that does not divide the dim is dropped (replicated) rather
+than crashing, so one rules table serves vocab sizes like 49155 and head
+counts like 25.
+
+Sharding scheme (DESIGN.md §5):
+  embeddings   vocab on "model" (fallback d_model)
+  attention    col-sharded qkv, row-sharded o ("model" = TP axis)
+  MLP          megatron col→row
+  MoE          experts on "model" (EP); fsdp adds "data" on d_ff/d_model
+  SSM/RWKV     channel/head-sharded on "model" (state stays device-local)
+  batch        ("pod", "data")
+  optimizer    param spec + ZeRO-1 over "data" on the first free dim
+  KV caches    batch on ("pod","data"), sequence on "model"
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# archs whose dense weights exceed one chip's HBM under pure TP -> shard
+# weights over "data" too (FSDP / ZeRO-3 style; gathered per-layer inside
+# the scan).  MoE archs instead use expert-parallelism over "data"
+# (E@data × TP@model within each expert), so none currently need FSDP.
+FSDP_ARCHS: tuple = ()
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    sizes = [mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]
+    return dim % int(np.prod(sizes)) == 0
+
+
+def _checked(spec_tail, shape, mesh: Mesh) -> P:
+    """Right-align spec_tail on shape; drop non-dividing axes; pad with None."""
+    n = len(shape)
+    tail = list(spec_tail)[-n:]
+    full = [None] * (n - len(tail)) + tail
+    out = []
+    for dim, ax in zip(shape, full):
+        out.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+_COL = ("wq", "wk", "wv", "wg", "w_gate", "w_up", "in_proj", "dt_proj",
+        "wq_a", "wq_b", "wkv_b", "wr", "proj")
+_ROW = ("wo", "w_down", "out_proj", "x_proj")
+_REP = ("wkv_a", "router", "mix_w1", "mix_w2", "w_lora1", "w_lora2",
+        "mu_base", "mu_k", "mu_r", "w_base", "ln_scale", "scale", "dt_bias")
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh: Mesh,
+               fsdp: bool, tied: bool = False) -> P:
+    """FSDP note: "data" is stacked on the SAME dim as "model" (a
+    ("data","model") tuple → pure N-way weight sharding, gathered per layer
+    inside the scan).  Sharding "data" on the *opposite* dim conflicts with
+    the batch's data sharding and makes GSPMD replicate activations — found
+    via the buffer-assignment dump (EXPERIMENTS.md §Perf iteration 0)."""
+    name = path.split("/")[-1]
+    in_moe = "/moe/" in path and "/shared/" not in path
+
+    def tp(dim_idx_from_right: int, spec_tail):
+        """spec_tail with ("data","model") fused on the model dim if fsdp."""
+        if not fsdp or "data" not in mesh.axis_names:
+            return _checked(spec_tail, shape, mesh)
+        fused = tuple(("data", "model") if ax == "model" else ax
+                      for ax in spec_tail)
+        cand = _checked(fused, shape, mesh)
+        # if the fused axis didn't divide, fall back to model-only
+        if any(isinstance(ax, tuple) for ax in cand):
+            return cand
+        return _checked(spec_tail, shape, mesh)
+
+    if name in ("embed", "lm_head"):
+        V, d = shape[-2], shape[-1]
+        # lm_head (and tied embeddings): vocab on "model" → [T@data, V@model]
+        # logits.  Untied input embed: d on "model" — a vocab-sharded gather
+        # backward scatters a replicated f32 [V, d] grad (buffer dump, §Perf).
+        if name == "lm_head":
+            if _fits(V, mesh, "model"):
+                return _checked((None, "model", None), shape, mesh)
+            return _checked((None, None, "model"), shape, mesh)
+        # input embed: prefer d-shard — EXCEPT tied archs, whose logits
+        # lower from the same table (vocab-shard wins there: a d-sharded
+        # contraction would all-reduce replicated [T, V] logits).
+        if tied and _fits(V, mesh, "model"):
+            return _checked((None, "model", None), shape, mesh)
+        if _fits(d, mesh, "model"):
+            return _checked((None, None, "model"), shape, mesh)
+        if _fits(V, mesh, "model"):
+            return _checked((None, "model", None), shape, mesh)
+        return P(*([None] * len(shape)))
+    if name in ("codebook_embed", "codebook_head"):
+        # EnCodec codebooks are tiny (2048×d) — replicate
+        return P(*([None] * len(shape)))
+    if name == "u":                                   # rwkv bonus [L,H,n]
+        return _checked((None, "model", None), shape, mesh)
+    if name in ("A_log", "conv_w"):                   # [..., di, N] / [...,K,di]
+        if name == "A_log":
+            return _checked((None, "model", None), shape, mesh)
+        return _checked((None, None, "model"), shape, mesh)
+    if name == "D":
+        return _checked((None, "model"), shape, mesh)
+    if in_moe and name in ("w_gate", "w_up", "w_down"):  # [L,E,d,ff]/[L,E,ff,d]
+        # Expert-parallel over "data" + megatron TP over "model" inside each
+        # expert.  Tokens reach their expert via an all-to-all on "data" (the
+        # GShard schedule); d_model stays unsharded so activations keep their
+        # batch sharding.
+        E = shape[1]
+        e_ax = "data" if ("data" in mesh.axis_names and _fits(E, mesh, "data")) \
+            else ("model" if _fits(E, mesh, "model") else None)
+        tp_ax = "model" if e_ax != "model" else None
+        if name == "w_down":                          # [L,E,ff,d]
+            return _checked((None, e_ax, tp_ax, None), shape, mesh)
+        return _checked((None, e_ax, None, tp_ax), shape, mesh)
+    if "/channel/" in path and name == "wv":          # rwkv channel [L,ff,d]
+        return tp(1, (None, "model", None))
+    if name in _ROW:
+        return tp(1, (None, "model", None))
+    if name in _COL:
+        return tp(0, (None, None, "model"))
+    if name in _REP or shape == () or len(shape) <= 2:
+        return P(*([None] * len(shape)))
+    return P(*([None] * len(shape)))
+
+
+def param_pspecs(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    fsdp = cfg.arch_id in FSDP_ARCHS or cfg.parallel_strategy == "fsdp"
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: param_spec(_path_str(path), x.shape, mesh, fsdp,
+                                   tied=cfg.tie_embeddings), params)
+
+
+def zero1_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Add "data" sharding to the first replicated, divisible dim (ZeRO-1)."""
+    if "data" not in mesh.axis_names:
+        return spec
+    used = set()
+    for s in spec:
+        if s is None:
+            continue
+        for a in (s if isinstance(s, tuple) else (s,)):
+            used.add(a)
+    if "data" in used:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (dim, s) in enumerate(zip(shape, parts)):
+        if s is None and _fits(dim, mesh, "data"):
+            parts[i] = "data"
+            return P(*parts)
+    return spec
+
+
+def opt_pspecs(cfg: ModelConfig, params: Any, mesh: Mesh) -> Any:
+    base = param_pspecs(cfg, params, mesh)
+    return jax.tree.map(
+        lambda x, s: zero1_spec(s, x.shape, mesh), params, base)
+
+
+def batch_pspecs(batch: Dict[str, Any], mesh: Mesh) -> Dict[str, P]:
+    ba = batch_axes(mesh)
+    out = {}
+    for k, v in batch.items():
+        dims = getattr(v, "ndim", None) or len(v.shape)
+        b = v.shape[0]
+        ax = ba if (ba and b % int(np.prod([mesh.shape[a] for a in ba])) == 0) else None
+        out[k] = P(*((ax,) + (None,) * (dims - 1)))
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Any, mesh: Mesh, seq_len: int) -> Any:
+    """KV cache: [L, B, S, ...] → B on ("pod","data"), S on "model";
+    recurrent states: channel/head dims on "model"."""
+    ba = batch_axes(mesh)
+    nb = int(np.prod([mesh.shape[a] for a in ba])) if ba else 1
+
+    def spec(kp, x):
+        name = _path_str(kp).split("/")[-1]
+        shape = x.shape
+        b_ax = ba if (len(shape) > 1 and shape[1] % max(nb, 1) == 0 and ba) else None
+        if name in ("k", "v"):            # [L,B,S,KV,hd]
+            s_ax = "model" if _fits(shape[2], mesh, "model") else None
+            return P(None, b_ax, s_ax, None, None)
+        if name in ("c_kv", "k_rope"):    # [L,B,S,r]
+            s_ax = "model" if _fits(shape[2], mesh, "model") else None
+            return P(None, b_ax, s_ax, None)
+        if name == "wkv":                 # [L,B,H,n,n]
+            h_ax = "model" if _fits(shape[2], mesh, "model") else None
+            return P(None, b_ax, h_ax, None, None)
+        if name == "h":                   # [L,B,di,N]
+            d_ax = "model" if _fits(shape[2], mesh, "model") else None
+            return P(None, b_ax, d_ax, None)
+        if name == "conv":                # [L,B,K,di]
+            d_ax = "model" if _fits(shape[3], mesh, "model") else None
+            return P(None, b_ax, None, d_ax)
+        if name in ("tm_x", "cm_x"):      # [L,B,d]
+            d_ax = "model" if _fits(shape[2], mesh, "model") else None
+            return P(None, b_ax, d_ax)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

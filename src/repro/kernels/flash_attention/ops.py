@@ -1,0 +1,22 @@
+"""Jit'd public wrapper: [B, S, H, hd]-layout flash attention with backend
+selection (Pallas-TPU on TPU, interpret elsewhere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    window: int = 0, bq: int = 512, bk: int = 512,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q: [B, S, H, hd]; k, v: [B, S, KV, hd]; causal (+ optional window)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_pallas(qt, kt, vt, bq=bq, bk=bk, window=window,
+                                 interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

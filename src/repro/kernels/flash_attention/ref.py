@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) GQA attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, window: int = 0) -> jnp.ndarray:
+    """q: [B, S, H, hd]; k, v: [B, S, KV, hd]; causal; window<=0 => full."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if KV != H:
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = kj <= qi
+    if window > 0:
+        mask &= kj > qi - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the chunked WKV-6 kernel ([B,T,H,n] layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_wkv.kernel import wkv6_pallas
+
+
+def wkv6(r, k, v, w, u, s0=None, *, chunk: int = 32,
+         interpret: bool | None = None):
+    """r,k,v,w: [B,T,H,n]; u: [H,n]; s0: [B,H,n,n].  Returns (y, S_final)
+    with y: [B,T,H,n] f32 and S_final: [B,H,n,n] f32."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, H, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, n, n), jnp.float32)
+
+    def flat(x):
+        return x.swapaxes(1, 2).reshape(B * H, T, n).astype(jnp.float32)
+
+    u_full = jnp.tile(u.astype(jnp.float32), (B, 1))        # [B*H, n]
+    y, sfin = wkv6_pallas(flat(r), flat(k), flat(v), flat(w), u_full,
+                          s0.reshape(B * H, n, n).astype(jnp.float32),
+                          chunk=chunk, interpret=interpret)
+    y = y.reshape(B, H, T, n).swapaxes(1, 2)
+    return y, sfin.reshape(B, H, n, n)

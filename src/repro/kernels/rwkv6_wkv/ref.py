@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (sequential scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, s0=None):
+    """r,k,v,w: [B, T, H, n] (w in (0,1)); u: [H, n]; s0: [B, H, n, n].
+
+    y_t = r_t · (S_{t-1} + diag(u)·k_tᵀv_t);  S_t = diag(w_t)·S_{t-1} + k_tᵀv_t
+    Returns (y [B,T,H,n], S_final [B,H,n,n]), all f32.
+    """
+    B, T, H, n = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, n, n), jnp.float32)
+
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), s_last

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: chunked selective scan (Mamba/Hymba SSM hot-spot).
+
+EXPERIMENTS.md §Perf A found the jnp floor for the Hymba SSM branch: the
+log-depth ``associative_scan`` makes ~log₂S full passes over the [B,S,D,N]
+tensors (47 s memory term for train_4k).  This kernel is the fused form that
+floor analysis projected: the [d_blk, N] state lives in VMEM across the
+chunk loop, inputs are read once and y written once — ~2 HBM passes total.
+
+Within a chunk of c steps the recurrence h_t = a_t⊙h_{t-1} + b_t expands to
+
+    h_t = P_t ⊙ h₀ + Σ_{s≤t} exp(logP_t − logP_s) ⊙ b_s ,  P_t = Π_{τ≤t} a_τ
+
+computed with the exact masked-exponent form (every exponent ≤ 0 — no
+1/P underflow; same trick as the WKV kernel).
+
+Grid = (B, D/d_blk, T/c), chunk innermost; VMEM per step:
+  a,b blocks 2·[c,d_blk,N] f32 + pairwise [c,c,d_blk,N] + state [d_blk,N]
+  (c=16, d_blk=64, N=16 → ≈ 1.3 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(a_ref, b_ref, c_ref, h0_ref, y_ref, hfin_ref, h_scr,
+            *, c: int, d_blk: int, n: int):
+    t = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(t == 0)
+    def _load():
+        h_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)              # [c, d_blk, N]
+    b = b_ref[0].astype(jnp.float32)
+    Cc = c_ref[0].astype(jnp.float32)             # [c, N]
+
+    la = jnp.log(a)
+    logP = jnp.cumsum(la, axis=0)                 # inclusive, ≤ 0 rows
+    P = jnp.exp(logP)
+
+    # pairwise decay weights, exponent masked BEFORE exp (exact, safe)
+    Dst = logP[:, None] - logP[None, :]           # [c, c, d_blk, N]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    Dst = jnp.where((si <= ti)[:, :, None, None], Dst, NEG_INF)
+    W = jnp.exp(Dst)
+
+    h0 = h_scr[...]
+    h = P * h0[None] + jnp.einsum("tsdn,sdn->tdn", W, b)
+    y = jnp.einsum("tdn,tn->td", h, Cc)           # [c, d_blk]
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_scr[...] = h[c - 1]
+
+    @pl.when(t == nt - 1)
+    def _emit():
+        hfin_ref[0] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_blk", "interpret"))
+def selective_scan_pallas(a, b, C, h0, *, chunk: int = 16, d_blk: int = 64,
+                          interpret: bool = False):
+    """a, b: [B, T, D, N] f32; C: [B, T, N]; h0: [B, D, N].
+    Returns (y [B, T, D] f32, h_last [B, D, N] f32)."""
+    B, T, D, N = a.shape
+    c = min(chunk, T)
+    dk = min(d_blk, D)
+    assert T % c == 0 and D % dk == 0, (T, c, D, dk)
+    grid = (B, D // dk, T // c)
+    y, hfin = pl.pallas_call(
+        functools.partial(_kernel, c=c, d_blk=dk, n=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, dk, N), lambda bi, j, t: (bi, t, j, 0)),
+            pl.BlockSpec((1, c, dk, N), lambda bi, j, t: (bi, t, j, 0)),
+            pl.BlockSpec((1, c, N), lambda bi, j, t: (bi, t, 0)),
+            pl.BlockSpec((1, dk, N), lambda bi, j, t: (bi, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, dk), lambda bi, j, t: (bi, t, j)),
+            pl.BlockSpec((1, dk, N), lambda bi, j, t: (bi, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((dk, N), jnp.float32)],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32), C.astype(jnp.float32),
+      h0.astype(jnp.float32))
+    return y, hfin

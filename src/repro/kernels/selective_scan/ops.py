@@ -1,0 +1,19 @@
+"""Jit'd public wrapper for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.kernel import selective_scan_pallas
+
+
+def selective_scan(a, b, C, h0=None, *, chunk: int = 16, d_blk: int = 64,
+                   interpret: bool | None = None):
+    """h_t = a_t⊙h_{t-1} + b_t; y_t = C_t·h_t.  a,b: [B,T,D,N]; C: [B,T,N]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, T, D, N = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+    return selective_scan_pallas(a, b, C, h0, chunk=chunk, d_blk=d_blk,
+                                 interpret=interpret)

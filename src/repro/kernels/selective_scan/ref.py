@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(a, b, C, h0=None):
+    """h_t = a_t ⊙ h_{t-1} + b_t ;  y_t = Σ_n C_t[n]·h_t[:,n]
+
+    a, b: [B, T, D, N] (a ∈ (0,1]); C: [B, T, N]; h0: [B, D, N].
+    Returns (y [B, T, D], h_last [B, D, N]), f32.
+    """
+    B, T, D, N = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D, N), jnp.float32)
+
+    def step(h, xs):
+        a_t, b_t, C_t = xs
+        h = a_t * h + b_t
+        return h, jnp.einsum("bdn,bn->bd", h, C_t)
+
+    xs = (a.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    h_last, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), h_last

@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the support-count kernel (handles padding and
+backend selection: Pallas-TPU on TPU, interpret-mode elsewhere)."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.support_count.kernel import support_count_pallas
+from repro.kernels.support_count.ref import support_count_ref
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int):
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def support_count(T: jnp.ndarray, C: jnp.ndarray, *,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Support counts [M] int32.  Pads N→8·, M→128·, I→128· as the kernel
+    requires; padded candidate rows have |c|=0 and are sliced away (a padded
+    all-zero candidate would match every row, so we must slice, not rely on
+    zero counts)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N0, M0 = T.shape[0], C.shape[0]
+    T = _pad_to(_pad_to(T.astype(jnp.int8), 1, 128), 0, 8)
+    C = _pad_to(_pad_to(C.astype(jnp.int8), 1, 128), 0, 128)
+    sizes = C.astype(jnp.float32).sum(axis=1)[None, :]          # [1, M]
+    bn = min(512, T.shape[0])
+    bm = min(256, C.shape[0])
+    bi = min(512, T.shape[1])
+    # grid-divisibility: shrink blocks to gcd-friendly sizes
+    while T.shape[0] % bn:
+        bn //= 2
+    while C.shape[0] % bm:
+        bm //= 2
+    while T.shape[1] % bi:
+        bi //= 2
+    out = support_count_pallas(T, C, sizes, bn=bn, bm=bm, bi=bi,
+                               interpret=interpret)
+    counts = out[0, :M0]
+    # padded transaction rows are all-zero: they can only match |c|=0 sets,
+    # which do not occur among real candidates (Apriori starts at k=1).
+    return counts
+
+
+support_count_oracle = support_count_ref

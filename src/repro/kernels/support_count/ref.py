@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the support-count kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def support_count_ref(T: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """T: [N, I] uint8/int8 0/1 transactions; C: [M, I] 0/1 candidate masks.
+
+    support[m] = #{ t : T[t] ∧ C[m] == C[m] }  (itemset containment count)
+    """
+    dots = jnp.dot(T.astype(jnp.int32), C.astype(jnp.int32).T)      # [N, M]
+    sizes = C.astype(jnp.int32).sum(axis=1)                          # [M]
+    return (dots == sizes[None, :]).astype(jnp.int32).sum(axis=0)    # [M]

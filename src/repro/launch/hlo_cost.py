@@ -1,0 +1,303 @@
+"""Trip-count-aware HLO cost model.
+
+``compiled.cost_analysis()`` counts every while-loop (scan) body exactly
+once (verified empirically — a 10-step scan of a 128³ dot reports 1/10th
+the flops of its unrolled twin).  Every production model here scans over
+layers / microbatches / attention chunks, so raw cost_analysis under-counts
+by 1-3 orders of magnitude.  This module re-derives flops / HBM traffic /
+collective bytes by walking the *scheduled, SPMD-partitioned* HLO text:
+
+* computations are parsed into per-op records with a local symbol table
+  (op name → result type/shape), so operand shapes resolve exactly;
+* ``while`` ops multiply their body cost by the trip count XLA annotates in
+  ``backend_config={"known_trip_count":{"n":...}}`` (fallback: the constant
+  in the condition's ROOT compare; else 1 + a warning flag);
+* flops: dot ops contribute 2·|result|·K (K = contracted extent from the
+  lhs operand shape); elementwise flops are ignored (sub-1% for these
+  models); fusions are recursed for dots.
+* HBM traffic: per op, result + operand bytes, with fusion interiors elided
+  (a fusion is one read of its operands + one write of its result — XLA's
+  own model) and gather/scatter counted at moved-bytes, not table size.
+* collective wire bytes: as in roofline.parse_collectives, but accumulated
+  through the weighted call graph.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1, "pred": 1,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|s4|u64|u32|u16|u8|u4|"
+    r"pred|c64|c128|token)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'known_trip_count[\\"=:{\s]+n[\\":\s]+(\d+)')
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes_elems(segment: str) -> Tuple[int, int]:
+    total_b, total_e = 0, 0
+    for t, dims in _TYPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total_b += n * _DTYPE_BYTES[t]
+        total_e += n
+    return total_b, total_e
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_segment: str
+    rest: str
+    operands: List[str]
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    symbols: Dict[str, str] = field(default_factory=dict)   # name -> result seg
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_op: Dict[str, float] = field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def scaled(self, k: float) -> "HloCost":
+        return HloCost(self.flops * k, self.traffic_bytes * k,
+                       self.collective_bytes * k,
+                       {o: b * k for o, b in self.collective_by_op.items()},
+                       self.unknown_trip_loops)
+
+    def add(self, other: "HloCost"):
+        self.flops += other.flops
+        self.traffic_bytes += other.traffic_bytes
+        self.collective_bytes += other.collective_bytes
+        for o, b in other.collective_by_op.items():
+            self.collective_by_op[o] = self.collective_by_op.get(o, 0) + b
+        self.unknown_trip_loops += other.unknown_trip_loops
+
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota", "reshape"}
+
+
+def _opcode_of(segment: str) -> str:
+    """First identifier after the result type(s)."""
+    # strip result types: take text after the last ']' or ')' prefix group
+    m = re.match(r"^(?:\([^)]*\)|\S+)\s+([\w\-]+)", segment)
+    return m.group(1) if m else ""
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, _Computation] = {}
+        self._parse(hlo_text)
+        self._memo: Dict[str, HloCost] = {}
+        self.entry = self._entry_name(hlo_text)
+
+    # ------------------------------------------------------------------
+    def _parse(self, text: str):
+        cur: Optional[_Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            header = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->.*\{", line)
+            if header:
+                cur = _Computation(header.group(1))
+                self.computations[cur.name] = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            # result segment = up to the opcode; keep whole rhs for parsing
+            opcode = _opcode_of(rhs)
+            # operands: first (...) group after opcode
+            after = rhs.split(opcode, 1)[1] if opcode and opcode in rhs else rhs
+            om = _OPERANDS_RE.search(after)
+            operands = []
+            if om:
+                for tok in om.group(1).split(","):
+                    tok = tok.strip()
+                    if tok.startswith("%"):
+                        operands.append(tok[1:])
+                    else:
+                        mm = re.search(r"%([\w.\-]+)", tok)
+                        if mm:
+                            operands.append(mm.group(1))
+            op = _Op(name, opcode, rhs.split(opcode)[0], rhs, operands)
+            cur.ops.append(op)
+            cur.symbols[name] = op.result_segment
+        # index by name
+
+    def _entry_name(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        return next(reversed(self.computations))
+
+    # ------------------------------------------------------------------
+    def _trip_count(self, op: _Op) -> Tuple[float, bool]:
+        m = _TRIP_RE.search(op.rest)
+        if m:
+            return float(m.group(1)), True
+        cm = _COND_RE.search(op.rest)
+        if cm and cm.group(1) in self.computations:
+            cond = self.computations[cm.group(1)]
+            consts = {o.name: o for o in cond.ops if o.opcode == "constant"}
+            for o in cond.ops:
+                if o.opcode in ("compare", "fusion") and consts:
+                    vals = []
+                    for cn, co in consts.items():
+                        vm = re.search(r"constant\((\d+)\)", co.rest)
+                        if vm:
+                            vals.append(int(vm.group(1)))
+                    if vals:
+                        return float(max(vals)), True
+        return 1.0, False
+
+    # ------------------------------------------------------------------
+    def _dot_flops(self, comp: _Computation, op: _Op) -> float:
+        rb, relems = _type_bytes_elems(op.result_segment)
+        k = 1
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+        if cm and op.operands:
+            lhs_seg = comp.symbols.get(op.operands[0], "")
+            tm = _TYPE_RE.search(lhs_seg)
+            if tm:
+                dims = [int(d) for d in tm.group(2).split(",") if d]
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * relems * k
+
+    def _op_traffic(self, comp: _Computation, op: _Op) -> float:
+        if op.opcode in _SKIP_TRAFFIC:
+            return 0.0
+        rb, _ = _type_bytes_elems(op.result_segment)
+        if op.opcode in ("gather", "dynamic-slice"):
+            idx_b = sum(_type_bytes_elems(comp.symbols.get(o, ""))[0]
+                        for o in op.operands[1:])
+            return 2.0 * rb + idx_b
+        if op.opcode in ("scatter", "dynamic-update-slice"):
+            upd = op.operands[-1] if op.opcode == "dynamic-update-slice" \
+                else (op.operands[1] if len(op.operands) > 1 else op.operands[0])
+            ub, _ = _type_bytes_elems(comp.symbols.get(upd, ""))
+            return 2.0 * max(ub, 1.0)
+        ob = sum(_type_bytes_elems(comp.symbols.get(o, ""))[0]
+                 for o in op.operands)
+        return rb + ob
+
+    def _collective(self, op: _Op) -> Optional[Tuple[str, float]]:
+        if op.opcode not in _COLLECTIVES:
+            return None
+        rb, _ = _type_bytes_elems(op.result_segment)
+        factor = 1.0
+        if op.opcode == "all-reduce":
+            factor = 2.0
+        elif op.opcode == "reduce-scatter":
+            m = _GROUPS_RE.search(op.rest)
+            factor = float(m.group(2)) if m else 1.0
+        return op.opcode, rb * factor
+
+    # ------------------------------------------------------------------
+    def cost_of(self, comp_name: str) -> HloCost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.computations.get(comp_name)
+        total = HloCost()
+        self._memo[comp_name] = total     # cycle guard (shouldn't happen)
+        if comp is None:
+            return total
+        for op in comp.ops:
+            col = self._collective(op)
+            if col:
+                total.collective_bytes += col[1]
+                total.collective_by_op[col[0]] = \
+                    total.collective_by_op.get(col[0], 0) + col[1]
+                total.traffic_bytes += self._op_traffic(comp, op)
+                continue
+            if op.opcode == "while":
+                trips, known = self._trip_count(op)
+                bm = _CALL_RE.search(op.rest)
+                if bm:
+                    body = self.cost_of(bm.group(1)).scaled(trips)
+                    total.add(body)
+                cm = _COND_RE.search(op.rest)
+                if cm:
+                    total.add(self.cost_of(cm.group(1)).scaled(trips + 1))
+                if not known:
+                    total.unknown_trip_loops += 1
+                continue
+            if op.opcode == "conditional":
+                bm = _BRANCHES_RE.search(op.rest)
+                if bm:
+                    branch_costs = [self.cost_of(b.strip().lstrip("%"))
+                                    for b in bm.group(1).split(",")]
+                    if branch_costs:
+                        worst = max(branch_costs, key=lambda c: c.flops + c.traffic_bytes)
+                        total.add(worst)
+                continue
+            if op.opcode in ("fusion", "call", "custom-call", "reduce",
+                             "sort", "map", "reduce-window", "select-and-scatter"):
+                total.traffic_bytes += self._op_traffic(comp, op)
+                for sub in _CALL_RE.findall(op.rest):
+                    subc = self.cost_of(sub)
+                    # fusion interiors: flops + collectives only, no traffic
+                    total.flops += subc.flops
+                    total.collective_bytes += subc.collective_bytes
+                    for o, b in subc.collective_by_op.items():
+                        total.collective_by_op[o] = \
+                            total.collective_by_op.get(o, 0) + b
+                    total.unknown_trip_loops += subc.unknown_trip_loops
+                continue
+            if op.opcode == "dot":
+                total.flops += self._dot_flops(comp, op)
+                total.traffic_bytes += self._op_traffic(comp, op)
+                continue
+            if op.opcode == "convolution":
+                rb, relems = _type_bytes_elems(op.result_segment)
+                kb, kelems = _type_bytes_elems(
+                    comp.symbols.get(op.operands[1], "")) if len(op.operands) > 1 else (0, 1)
+                total.flops += 2.0 * relems * max(kelems, 1)
+                total.traffic_bytes += self._op_traffic(comp, op)
+                continue
+            total.traffic_bytes += self._op_traffic(comp, op)
+        self._memo[comp_name] = total
+        return total
+
+    def entry_cost(self) -> HloCost:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> HloCost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,145 @@
+"""Roofline-term derivation from dry-run compile artifacts (task §ROOFLINE).
+
+Per (arch × shape × mesh):
+
+  compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+  memory_s     = HLO_bytes_per_device / HBM_BW
+  collective_s = collective_bytes_per_device / LINK_BW
+
+``compiled.cost_analysis()`` on the SPMD-partitioned module reports
+*per-device* flops/bytes, so the task formula ``global / (chips × peak)``
+is applied in its per-device form (identical value, no chip count needed).
+
+collective_bytes comes from parsing the partitioned HLO: we sum wire bytes
+per device for every collective:
+  all-gather          → result bytes (what a device receives)
+  all-reduce          → 2 × result bytes (ring: reduce-scatter + all-gather)
+  reduce-scatter      → result bytes × group size (what a device sends)
+  all-to-all          → result bytes
+  collective-permute  → result bytes
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+LINK_BW = 50e9             # bytes/s / ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|"
+                      r"u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Wire bytes per device from partitioned HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        op = next((c for c in _COLLECTIVES
+                   if re.search(rf"\b{c}(\.\d+)?\(", line)), None)
+        if op is None:
+            continue
+        if line.startswith("%" + op) or f" {op}(" in line or f"= {op}" in line:
+            head = line.split(f" {op}")[0] if f" {op}" in line else line.split("(")[0]
+        else:
+            head = line.split("(")[0]
+        result_bytes = sum(_shape_bytes(t, d) for t, d in _TYPE_RE.findall(head))
+        if result_bytes == 0:
+            continue
+        factor = 1.0
+        if op == "all-reduce":
+            factor = 2.0
+        elif op == "reduce-scatter":
+            m = _GROUPS_RE.search(line)
+            factor = float(m.group(2)) if m else 1.0
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + int(result_bytes * factor)
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: int
+    model_flops: float
+    useful_ratio: float                  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    dominant: str = ""
+
+    def __post_init__(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step bound spent on *useful* model math at peak:
+        (MODEL_FLOPS / chips / PEAK) / max(term)."""
+        if self.bound_s <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_s
+
+
+def derive_terms(cost: Dict[str, float], coll: CollectiveStats, chips: int,
+                 model_flops_global: float) -> RooflineTerms:
+    flops_pd = float(cost.get("flops", 0.0))
+    bytes_pd = float(cost.get("bytes accessed", 0.0))
+    cbytes = coll.total_bytes
+    model_pd = model_flops_global / chips
+    return RooflineTerms(
+        compute_s=flops_pd / PEAK_FLOPS,
+        memory_s=bytes_pd / HBM_BW,
+        collective_s=cbytes / LINK_BW,
+        flops_per_device=flops_pd,
+        bytes_per_device=bytes_pd,
+        collective_bytes=cbytes,
+        model_flops=model_pd,
+        useful_ratio=(model_pd / flops_pd) if flops_pd else 0.0,
+    )
+
+
+def model_flops_for(cfg, shape, n_params_active: int, kind: str) -> float:
+    """6·N·D for training, 2·N·D for inference (fwd only)."""
+    tokens = shape.global_batch * (shape.seq_len if kind != "decode" else 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

@@ -1,0 +1,138 @@
+"""Step builders (train / prefill / decode) + abstract input specs.
+
+These are the functions the dry-run lowers and the launchers execute; they
+are pure and closed over a hashable :class:`ModelConfig`, so one jit cache
+entry serves every rank.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, grad_accum: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_accum > 1 scans over microbatches accumulating f32 gradients —
+    the activation-memory lever for the big shapes (§Perf)."""
+
+    def loss_fn(params, batch):
+        return T.model_loss(params, cfg, batch)
+
+    def train_step(params, opt_state: OptState, batch: Dict[str, jnp.ndarray]):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # Reshape (B, ...) -> (B/accum, accum, ...) then swap: the global
+            # batch dim stays contiguous per data shard, so GSPMD keeps the
+            # microbatch sharded on ("pod","data").  A direct
+            # (accum, B/accum, ...) reshape interleaves shards and silently
+            # REPLICATES activations (16x flops — found via the HLO cost
+            # model; see EXPERIMENTS.md §Perf iteration 0).
+            mbs = jax.tree.map(
+                lambda x: x.reshape((x.shape[0] // grad_accum, grad_accum)
+                                    + x.shape[1:]).swapaxes(0, 1), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                loss_sum, gsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (loss_sum + l, gsum), None
+
+            (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), mbs)
+            loss = loss_sum / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+        new_params, new_opt, metrics = adamw_update(opt_cfg, params, grads, opt_state)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serve
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, h = T.prefill(params, cfg, batch)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, greedy: bool = True):
+    def decode_one(params, cache, tokens, pos):
+        logits, new_cache = T.decode_step(params, cfg, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    return decode_one
+
+
+# ---------------------------------------------------------------------------
+# abstract input specs (MULTI-POD DRY-RUN §2)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the data batch of a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "audio":
+        return {"frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+                "labels": _sds((B, S, cfg.n_codebooks), jnp.int32)}
+    if cfg.frontend == "vision":
+        return {"tokens": _sds((B, S), jnp.int32),
+                "vision_embeds": _sds((B, cfg.n_vision_tokens, cfg.d_model),
+                                      jnp.bfloat16)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Inputs for one decode step with a seq_len-deep cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+    if cfg.frontend == "audio":
+        tokens = _sds((B, 1, cfg.n_codebooks), jnp.int32)
+    else:
+        tokens = _sds((B, 1), jnp.int32)
+    return {"cache": cache, "tokens": tokens,
+            "pos": _sds((), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig, seed: int = 0) -> Any:
+    return jax.eval_shape(
+        functools.partial(T.init_params, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_opt_state(params_spec) -> OptState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return OptState(mu=jax.tree.map(f32, params_spec),
+                    nu=jax.tree.map(f32, params_spec),
+                    step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def input_specs(arch_or_cfg, shape_name: str) -> Dict[str, Any]:
+    """Every model input for (arch, shape) as ShapeDtypeStructs."""
+    from repro.configs.base import get_config
+    cfg = arch_or_cfg if isinstance(arch_or_cfg, ModelConfig) \
+        else get_config(arch_or_cfg)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

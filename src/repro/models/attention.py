@@ -1,0 +1,299 @@
+"""Attention variants: GQA, sliding-window local/global, MLA (DeepSeek-V2).
+
+Two full-sequence implementations:
+
+* ``naive``   — materializes the [B, H, S, S] score tensor (XLA baseline).
+* ``chunked`` — online-softmax over KV chunks inside a ``lax.scan``: peak
+  activation memory drops from O(S²) to O(S·chunk).  This is the pure-JAX
+  realization of flash attention (the Pallas kernel in
+  ``repro.kernels.flash_attention`` is the TPU-native version of the same
+  schedule; lowering here stays backend-portable for the dry-run).
+
+Window semantics: ``window <= 0`` means full causal; ``window = w`` allows
+key j for query i iff ``i - w < j <= i``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# GQA projections
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype) -> Params:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, H * hd, dtype),
+        "wk": dense_init(k2, d, KV * hd, dtype),
+        "wv": dense_init(k3, d, KV * hd, dtype),
+        "wo": dense_init(k4, H * hd, d, dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal: bool, window: jnp.ndarray | int,
+                    q_offset: int | jnp.ndarray = 0) -> jnp.ndarray:
+    """q: [B,Sq,H,hd]; k,v: [B,Sk,KV,hd].  Returns [B,Sq,H,hd]."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(Sq)[:, None] + q_offset
+    kj = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kj <= qi
+    w = jnp.asarray(window)
+    mask &= jnp.where(w > 0, kj > qi - w, True)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: jnp.ndarray | int,
+                      chunk: int = 1024) -> jnp.ndarray:
+    """Online-softmax attention, O(S·chunk) memory.  Shapes as naive."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    hd_v = v.shape[-1]          # may differ from q/k head_dim (MLA)
+    if S % chunk != 0:
+        return naive_attention(q, k, v, causal=causal, window=window)
+    n_rep = H // KV
+    kc = k.reshape(B, S // chunk, chunk, KV, hd)
+    vc = v.reshape(B, S // chunk, chunk, KV, hd_v)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qi = jnp.arange(S)[:, None]
+    w = jnp.asarray(window)
+
+    # NOTE the jax.checkpoint: without it, scan-autodiff saves every chunk's
+    # [B,H,S,chunk] probability tensor — the full S² matrix in f32, i.e. the
+    # exact memory wall flash attention exists to avoid.  With it, backward
+    # recomputes p per chunk (flash-backward semantics, found via the
+    # buffer-assignment dump; see EXPERIMENTS.md §Perf).
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, i = xs
+        k_i = _repeat_kv(k_i, n_rep)
+        v_i = _repeat_kv(v_i, n_rep)
+        kj = i * chunk + jnp.arange(chunk)[None, :]
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k_i).astype(jnp.float32) * scale
+        mask = jnp.ones((S, chunk), bool)
+        if causal:
+            mask &= kj <= qi
+        mask &= jnp.where(w > 0, kj > qi - w, True)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), v_i).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    init = (jnp.full((B, H, S), NEG_INF, jnp.float32),
+            jnp.zeros((B, H, S), jnp.float32),
+            jnp.zeros((B, H, S, hd_v), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (kc.swapaxes(0, 1), vc.swapaxes(0, 1), jnp.arange(S // chunk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.swapaxes(1, 2).astype(q.dtype)        # [B,S,H,hd]
+
+
+def attention_full(q, k, v, cfg, window) -> jnp.ndarray:
+    if cfg.attention_impl == "chunked":
+        return chunked_attention(q, k, v, causal=True, window=window,
+                                 chunk=cfg.attention_chunk)
+    return naive_attention(q, k, v, causal=True, window=window)
+
+
+# ---------------------------------------------------------------------------
+# GQA block: full-sequence and decode
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p: Params, cfg, x: jnp.ndarray, window, positions=None) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _split_heads(x @ p["wk"], KV, hd)
+    v = _split_heads(x @ p["wv"], KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.sequence_parallel:
+        # keep q's SEQUENCE dim sharded on "model" through the attention
+        # math (ring-attention-lite: kv replicated, scores [B,H,S/16,S]).
+        # Essential when n_heads doesn't divide the TP degree (hymba's 25
+        # heads): head-sharding degenerates to replication, but S always
+        # divides (§Perf hillclimb A iteration 2).
+        from repro.models.layers import sequence_shard
+        q = sequence_shard(q)
+    out = attention_full(q, k, v, cfg, window)
+    return out.reshape(B, S, H * hd) @ p["wo"]
+
+
+def gqa_prefill(p: Params, cfg, x: jnp.ndarray, window) -> Tuple[jnp.ndarray, Dict]:
+    """Forward + return KV for the cache."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    positions = jnp.arange(S)[None, :]
+    q = _split_heads(x @ p["wq"], H, hd)
+    k = _split_heads(x @ p["wk"], KV, hd)
+    v = _split_heads(x @ p["wv"], KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = attention_full(q, k, v, cfg, window)
+    return out.reshape(B, S, H * hd) @ p["wo"], {"k": k, "v": v}
+
+
+def gqa_decode(p: Params, cfg, x: jnp.ndarray, cache: Dict, pos: jnp.ndarray,
+               window) -> Tuple[jnp.ndarray, Dict]:
+    """One-token decode.  x: [B,1,d]; cache k/v: [B,Smax,KV,hd]; pos: scalar."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    Smax = cache["k"].shape[1]
+    posv = jnp.full((B, 1), pos)
+    q = apply_rope(_split_heads(x @ p["wq"], H, hd), posv, cfg.rope_theta)
+    k_new = apply_rope(_split_heads(x @ p["wk"], KV, hd), posv, cfg.rope_theta)
+    v_new = _split_heads(x @ p["wv"], KV, hd)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype), (0, pos, 0, 0))
+    kr = _repeat_kv(k, H // KV)
+    vr = _repeat_kv(v, H // KV)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr).astype(jnp.float32) / jnp.sqrt(jnp.float32(hd))
+    kj = jnp.arange(Smax)[None, None, None, :]
+    mask = kj <= pos
+    w = jnp.asarray(window)
+    mask &= jnp.where(w > 0, kj > pos - w, True)
+    s = jnp.where(mask, s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", prob, vr).reshape(B, 1, H * hd)
+    return out @ p["wo"], {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype) -> Params:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "wq_b": dense_init(ks[1], m.q_lora_rank, H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype),
+        "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "wkv_b": dense_init(ks[3], m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks[4], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _mla_qkv(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q = (x @ p["wq_a"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,rope]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p: Params, cfg, x: jnp.ndarray, window=0, positions=None,
+                return_cache: bool = False):
+    """Full-sequence MLA (train/prefill, non-absorbed form)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    kv = (c_kv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    # pad v's head_dim to match q/k for the shared kernel? no — direct einsum:
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    if cfg.attention_impl == "chunked" and S % cfg.attention_chunk == 0:
+        out = chunked_attention(q, k, v, causal=True, window=0, chunk=cfg.attention_chunk)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        qi = jnp.arange(S)[:, None]
+        kj = jnp.arange(S)[None, :]
+        s = jnp.where((kj <= qi)[None, None], s, NEG_INF)
+        prob = jax.nn.softmax(s, -1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", prob, v)
+    y = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    if return_cache:
+        return y, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return y
+
+
+def mla_decode(p: Params, cfg, x: jnp.ndarray, cache: Dict, pos) -> Tuple[jnp.ndarray, Dict]:
+    """Absorbed-form MLA decode: attends in the compressed latent space.
+
+    cache: c_kv [B,Smax,kv_lora], k_rope [B,Smax,rope].  Per-token compute is
+    O(Smax · kv_lora) HBM reads — the paper-faithful KV-compression win.
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    Smax = cache["c_kv"].shape[1]
+    posv = jnp.full((B, 1), pos)
+    q_nope, q_rope, c_kv_new, k_rope_new = _mla_qkv(p, cfg, x, posv)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new[:, :, 0, :].astype(cache["k_rope"].dtype), (0, pos, 0))
+    # absorb wkv_b's K half into q: q_eff [B,1,H,kv_lora]
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[:, :, :m.qk_nope_head_dim]            # [lora, H, nope]
+    w_uv = wkv_b[:, :, m.qk_nope_head_dim:]            # [lora, H, v]
+    q_eff = jnp.einsum("bqhn,lhn->bqhl", q_nope, w_uk)
+    scale = 1.0 / jnp.sqrt(jnp.float32(m.qk_nope_head_dim + m.qk_rope_head_dim))
+    s = (jnp.einsum("bqhl,bkl->bhqk", q_eff, c_kv)
+         + jnp.einsum("bqhr,bkr->bhqk", q_rope, k_rope)).astype(jnp.float32) * scale
+    kj = jnp.arange(Smax)[None, None, None, :]
+    s = jnp.where(kj <= pos, s, NEG_INF)
+    prob = jax.nn.softmax(s, -1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bkl->bqhl", prob, c_kv)     # latent context
+    out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_uv)
+    y = out.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def layer_windows(cfg) -> jnp.ndarray:
+    """Per-layer attention window vector: 0 = global, w = sliding window."""
+    if cfg.global_every and cfg.local_window:
+        idx = jnp.arange(cfg.n_layers)
+        return jnp.where((idx + 1) % cfg.global_every == 0, 0, cfg.local_window)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)

@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" — attention-free time-mix with data-dependent decay.
+
+Time-mix (per head, head_dim n): S_t = diag(w_t)·S_{t-1} + k_tᵀ·v_t,
+y_t = r_t·(S_{t-1} + diag(u)·k_tᵀ·v_t), with per-token decay
+w_t = exp(-exp(ŵ_t)) produced by a LoRA on the shifted input (the paper's
+data-dependent decay).  Full sequence = ``lax.scan`` over time; decode carries
+(S, last-x) state.  The chunked Pallas kernel in ``repro.kernels.rwkv6_wkv``
+implements the same recurrence blockwise for TPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+LORA_DIM = 96
+MIX_LORA = 32
+
+
+def rwkv_time_init(key, cfg, dtype) -> Params:
+    d = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 12)
+    return {
+        "mu_base": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(jnp.float32),
+        "mix_w1": dense_init(ks[1], d, 5 * MIX_LORA, dtype),
+        "mix_w2": (jax.random.normal(ks[2], (5, MIX_LORA, d), jnp.float32) * 0.01).astype(dtype),
+        "w_base": jnp.zeros((d,), jnp.float32) - 6.0,
+        "w_lora1": dense_init(ks[3], d, LORA_DIM, dtype),
+        "w_lora2": (jax.random.normal(ks[4], (LORA_DIM, d), jnp.float32) * 0.01).astype(dtype),
+        "u": (jax.random.normal(ks[5], (H, cfg.head_dim), jnp.float32) * 0.5),
+        "wr": dense_init(ks[6], d, d, dtype),
+        "wk": dense_init(ks[7], d, d, dtype),
+        "wv": dense_init(ks[8], d, d, dtype),
+        "wg": dense_init(ks[9], d, d, dtype),
+        "wo": dense_init(ks[10], d, d, dtype),
+        "ln_scale": jnp.ones((d,), jnp.float32),
+    }
+
+
+def rwkv_channel_init(key, cfg, dtype) -> Params:
+    d, ff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": dense_init(ks[0], d, ff, dtype),
+        "wv": dense_init(ks[1], ff, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray | None) -> jnp.ndarray:
+    """x: [B,S,d] -> previous-token tensor (zeros/carry at t=0)."""
+    prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if last is not None:
+        prev = prev.at[:, 0].set(last)
+    return prev
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: [B,S,H,n]; u: [H,n]; s0: [B,H,n,n] -> y [B,S,H,n], s_last."""
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs                            # [B,H,n]
+        kv = k_t[..., :, None] * v_t[..., None, :]         # [B,H,n,n]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(a.swapaxes(0, 1).astype(jnp.float32) for a in (r, k, v, w))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), s_last
+
+
+_LOG_CLAMP = 40.0
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Chunked WKV (same math as kernels/rwkv6_wkv, pure jnp): T/c grid
+    steps of dense [c,·] matrix work instead of T sequential state updates.
+    Exponents are clamped at ±40 (contributions through decay < e⁻⁴⁰ are
+    zero to f32 anyway).  Falls back to the sequential scan when T % c."""
+    B, T, H, n = r.shape
+    c = min(chunk, T)
+    if T % c != 0:
+        return _wkv_scan(r, k, v, w, u, s0)
+    G = T // c
+
+    def resh(x):
+        return x.reshape(B, G, c, H, n).swapaxes(0, 1).astype(jnp.float32)
+
+    rs, ks, vs, ws = map(resh, (r, k, v, w))
+
+    def chunk_step(S, xs):
+        rc, kc, vc, wc = xs                               # [B,c,H,n]
+        lw = jnp.log(wc)
+        logP = jnp.cumsum(lw, axis=1)                     # inclusive
+        logPm1 = logP - lw
+        r_hat = rc * jnp.exp(logPm1)                      # decay-adjusted r
+        k_hat = kc * jnp.exp(jnp.minimum(-logP, _LOG_CLAMP))
+        y_state = jnp.einsum("bchn,bhnm->bchm", r_hat, S)
+        A = jnp.einsum("bthn,bshn->bhts", r_hat, k_hat)   # [B,H,c,c]
+        ti = jnp.arange(c)[:, None]
+        si = jnp.arange(c)[None, :]
+        A = jnp.where((si < ti)[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhts,bshn->bthn", A, vc)
+        diag = jnp.einsum("bchn,hn,bchn->bch", rc, u.astype(jnp.float32), kc)
+        y = y_state + y_intra + diag[..., None] * vc
+        decay_all = jnp.exp(logP[:, -1])                  # [B,H,n]
+        k2 = kc * jnp.exp(logP[:, -1:, :, :] - logP)
+        S_new = decay_all[..., None] * S + jnp.einsum("bchn,bchm->bhnm", k2, vc)
+        return S_new, y
+
+    s_last, ys = jax.lax.scan(chunk_step, s0.astype(jnp.float32),
+                              (rs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(B, T, H, n)
+    return y, s_last
+
+
+def _ddlerp(p: Params, x, prev):
+    """Data-dependent token-shift interpolation -> per-stream mixed inputs."""
+    xx = prev - x
+    base = x + xx * p["mu_base"][0][None, None].astype(x.dtype)   # shared pre-mix
+    lora = jnp.tanh(base @ p["mix_w1"])                    # [B,S,5*MIX]
+    B, S, _ = x.shape
+    lora = lora.reshape(B, S, 5, MIX_LORA)
+    delta = jnp.einsum("bsfm,fmd->bsfd", lora, p["mix_w2"]).astype(x.dtype)
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        p["mu_base"].astype(x.dtype)[None, None] + delta)
+    return [mixed[:, :, i] for i in range(5)]              # w,k,v,r,g streams
+
+
+def rwkv_time_forward(p: Params, cfg, x: jnp.ndarray,
+                      state: Dict | None = None) -> Tuple[jnp.ndarray, Dict]:
+    B, S, d = x.shape
+    H, n = cfg.n_heads, cfg.head_dim
+    prev = _token_shift(x, state["tm_x"] if state is not None else None)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, prev)
+    w_hat = p["w_base"] + (jnp.tanh(xw @ p["w_lora1"]) @ p["w_lora2"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_hat))                           # [B,S,d] in (0,1)
+    r = (xr @ p["wr"]).reshape(B, S, H, n)
+    k = (xk @ p["wk"]).reshape(B, S, H, n)
+    v = (xv @ p["wv"]).reshape(B, S, H, n)
+    g = jax.nn.silu(xg @ p["wg"])
+    s0 = state["wkv"] if state is not None else jnp.zeros((B, H, n, n), jnp.float32)
+    if cfg.time_mix_impl == "chunked" and S > 1:
+        y, s_last = _wkv_chunked(r, k, v, w.reshape(B, S, H, n), p["u"], s0,
+                                 cfg.rwkv_chunk)
+    else:
+        y, s_last = _wkv_scan(r, k, v, w.reshape(B, S, H, n), p["u"], s0)
+    # group-norm per head
+    y = y.reshape(B, S, H, n)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(B, S, d) * p["ln_scale"]).astype(x.dtype) * g
+    out = y @ p["wo"]
+    new_state = {"tm_x": x[:, -1], "wkv": s_last}
+    return out, new_state
+
+
+def rwkv_channel_forward(p: Params, cfg, x: jnp.ndarray,
+                         state: Dict | None = None) -> Tuple[jnp.ndarray, Dict]:
+    prev = _token_shift(x, state["cm_x"] if state is not None else None)
+    xx = prev - x
+    xk = x + xx * p["mu_k"].astype(x.dtype)
+    xr = x + xx * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return out, {"cm_x": x[:, -1]}
+
+
+def rwkv_init_state(cfg, batch: int, dtype) -> Dict:
+    H, n = cfg.n_heads, cfg.head_dim
+    return {
+        "tm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_x": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, H, n, n), jnp.float32),
+    }

@@ -1,0 +1,160 @@
+"""Mamba-style selective SSM branch (Hymba's parallel-head partner).
+
+Selective scan: h_t = exp(Δ_t·A)⊙h_{t-1} + Δ_t·B_t·x_t ; y_t = C_t·h_t + D·x_t
+realized as a ``lax.scan`` over time (correctness path) with per-step state
+carry for decode.  Channel dimension is head-sharded on the ``model`` axis
+(state is per-channel — no cross-device traffic inside the scan).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init
+
+
+def ssm_init(key, cfg, dtype) -> Params:
+    sc = cfg.ssm
+    d = cfg.d_model
+    di = sc.expand * d
+    ks = jax.random.split(key, 7)
+    dt_rank = max(16, d // 16)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (sc.d_conv, di), jnp.float32) * 0.2).astype(dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * sc.d_state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, sc.d_state + 1, dtype=jnp.float32), (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _conv1d_causal(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv.  x: [B,S,di]; w: [K,di]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1], :] * w[i]
+    return out
+
+
+def _selective_scan(u, dt, A, B, C, D, h0=None, impl: str = "scan"):
+    """u,dt: [B,S,di]; A: [di,N]; B,C: [B,S,N].  Returns y [B,S,di], h_last.
+
+    impl="associative": h_t = a_t⊙h_{t-1} + b_t via log-depth
+    ``lax.associative_scan`` — replaces S sequential state updates with
+    log₂S vectorized passes (the production full-sequence path)."""
+    Bsz, S, di = u.shape
+    N = A.shape[1]
+    dA = jnp.exp(dt[..., None] * A[None, None])             # [B,S,di,N]
+    dBu = dt[..., None] * B[:, :, None, :] * u[..., None]   # [B,S,di,N]
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, di, N), jnp.float32)
+
+    if impl == "associative":
+        a = dA.astype(jnp.float32)
+        b = dBu.astype(jnp.float32)
+        # fold the initial state into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", h, C.astype(jnp.float32))
+        y = y + D[None, None] * u.astype(jnp.float32)
+        return y, h[:, -1]
+
+    if impl == "chunked":
+        # sequential over S/c chunks (state carry), associative within a
+        # chunk: log₂c passes touch only the [B,c,di,N] chunk instead of
+        # log₂S passes over the full sequence — HBM traffic drops ~S/c-fold
+        # on the inter-pass reads (§Perf hillclimb A).
+        c = 256
+        if S % c != 0:
+            return _selective_scan(u, dt, A, B, C, D, h0, impl="associative")
+        G = S // c
+        a_all = dA.astype(jnp.float32).reshape(Bsz, G, c, di, N)
+        b_all = dBu.astype(jnp.float32).reshape(Bsz, G, c, di, N)
+        C_all = C.astype(jnp.float32).reshape(Bsz, G, c, N)
+
+        def combine(left, right):
+            a1, b1 = left
+            a2, b2 = right
+            return a1 * a2, a2 * b1 + b2
+
+        def chunk_step(h, xs):
+            a_c, b_c, C_c = xs                       # [B,c,di,N], [B,c,N]
+            b_c = b_c.at[:, 0].add(a_c[:, 0] * h)
+            _, hs = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+            y_c = jnp.einsum("bsdn,bsn->bsd", hs, C_c)
+            return hs[:, -1], y_c
+
+        h_last, ys = jax.lax.scan(
+            chunk_step, h0,
+            (a_all.swapaxes(0, 1), b_all.swapaxes(0, 1), C_all.swapaxes(0, 1)))
+        y = ys.swapaxes(0, 1).reshape(Bsz, S, di)
+        y = y + D[None, None] * u.astype(jnp.float32)
+        return y, h_last
+
+    def step(h, xs):
+        dA_t, dBu_t, C_t = xs
+        h = dA_t * h + dBu_t                                # [B,di,N]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    xs = (dA.swapaxes(0, 1).astype(jnp.float32),
+          dBu.swapaxes(0, 1).astype(jnp.float32),
+          C.swapaxes(0, 1).astype(jnp.float32))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = ys.swapaxes(0, 1) + D[None, None] * u.astype(jnp.float32)
+    return y, h_last
+
+
+def ssm_forward(p: Params, cfg, x: jnp.ndarray,
+                state: Dict | None = None) -> Tuple[jnp.ndarray, Dict]:
+    """Full-sequence (train/prefill).  Returns (y, final_state)."""
+    sc = cfg.ssm
+    B, S, d = x.shape
+    di = sc.expand * d
+    dt_rank = p["dt_proj"].shape[0]
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_in = u
+    if state is not None:
+        conv_in = jnp.concatenate([state["conv"], u], axis=1)
+        u_c = _conv1d_causal(conv_in, p["conv_w"])[:, -S:]
+    else:
+        u_c = _conv1d_causal(u, p["conv_w"])
+    u_c = jax.nn.silu(u_c)
+    proj = u_c @ p["x_proj"]
+    dt_in, Bc, Cc = jnp.split(proj, [dt_rank, dt_rank + sc.d_state], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h0 = state["h"] if state is not None else None
+    impl = cfg.ssm_impl if S > 1 else "scan"
+    y, h_last = _selective_scan(u_c, dt, A, Bc, Cc, p["D"], h0, impl=impl)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    new_state = {
+        "h": h_last,
+        "conv": (conv_in if state is not None else u)[:, -(sc.d_conv - 1):, :],
+    }
+    return y @ p["out_proj"], new_state
+
+
+def ssm_init_state(cfg, batch: int, dtype) -> Dict:
+    sc = cfg.ssm
+    di = sc.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, di, sc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, sc.d_conv - 1, di), dtype),
+    }

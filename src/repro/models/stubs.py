@@ -1,0 +1,54 @@
+"""Modality-frontend STUBS (per task spec: the transformer backbone is real,
+the frontend supplies precomputed embeddings through ``input_specs()``).
+
+* audio (musicgen-large): EnCodec frame embeddings arrive precomputed as
+  [B, S, d_model]; the backbone owns per-codebook unembedding heads and
+  (for decode) per-codebook token embeddings that are summed.
+* vision (internvl2-26b): ViT patch embeddings arrive precomputed as
+  [B, n_vision_tokens, d_model] and are prepended to the text embeddings
+  behind a learned projection.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dense_init, embed_init
+
+
+def audio_head_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 2 * cfg.n_codebooks)
+    return {
+        "codebook_embed": jnp.stack(
+            [embed_init(ks[i], cfg.vocab_size, cfg.d_model, dtype)
+             for i in range(cfg.n_codebooks)]),
+        "codebook_head": jnp.stack(
+            [embed_init(ks[cfg.n_codebooks + i], cfg.vocab_size, cfg.d_model, dtype)
+             for i in range(cfg.n_codebooks)]),
+    }
+
+
+def audio_embed_tokens(p: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens: [B, S, n_codebooks] -> summed embeddings [B, S, d]."""
+    embs = jnp.einsum("ksv->", jnp.zeros((1, 1, 1)))  # placeholder no-op
+    del embs
+    out = 0.0
+    for i in range(p["codebook_embed"].shape[0]):
+        out = out + p["codebook_embed"][i][tokens[..., i]]
+    return out
+
+
+def audio_logits(p: Params, h: jnp.ndarray) -> jnp.ndarray:
+    """h: [B, S, d] -> [B, S, n_codebooks, V]."""
+    return jnp.einsum("bsd,kvd->bskv", h, p["codebook_head"])
+
+
+def vision_proj_init(key, cfg, dtype) -> Params:
+    return {"proj": dense_init(key, cfg.d_model, cfg.d_model, dtype)}
+
+
+def vision_prepend(p: Params, vis_embeds: jnp.ndarray, txt_embeds: jnp.ndarray) -> jnp.ndarray:
+    """vis: [B, Nv, d] (stub frontend output), txt: [B, S, d]."""
+    return jnp.concatenate([vis_embeds @ p["proj"], txt_embeds], axis=1)

@@ -1,0 +1,337 @@
+"""Decoder assembly: init / train-loss / prefill / decode for all 10 archs.
+
+Layers are *stacked* (leading axis = layer) and the body is a single
+``lax.scan`` step — HLO size is O(1) in depth, which keeps 60-layer 236B
+configs compilable and is remat-friendly.  Block types:
+
+* ``attn``   — [pre-norm GQA|MLA] + [pre-norm SwiGLU | MoE]
+* ``rwkv``   — [pre-norm RWKV6 time-mix] + [pre-norm channel-mix]
+* ``hybrid`` — parallel attention + Mamba heads, fused by per-branch norms
+               (Hymba), then SwiGLU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rwkv6, ssm as ssm_mod, stubs
+from repro.models.layers import (Params, chunked_softmax_xent, dtype_of,
+                                 embed_init, mlp, mlp_init, rmsnorm,
+                                 rmsnorm_init, sequence_shard, softmax_xent)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(cfg: ModelConfig, key, moe_layer: bool) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    p: Params = {"ln1": rmsnorm_init(d, jnp.float32), "ln2": rmsnorm_init(d, jnp.float32)}
+    if cfg.block_type in ("attn", "hybrid"):
+        if cfg.mla is not None:
+            p["attn"] = attn.mla_init(ks[0], cfg, dtype)
+        else:
+            p["attn"] = attn.gqa_init(ks[0], cfg, dtype)
+    if cfg.block_type == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(ks[1], cfg, dtype)
+        p["fuse_ln_a"] = rmsnorm_init(d, jnp.float32)
+        p["fuse_ln_s"] = rmsnorm_init(d, jnp.float32)
+    if cfg.block_type == "rwkv":
+        p["time"] = rwkv6.rwkv_time_init(ks[0], cfg, dtype)
+        p["channel"] = rwkv6.rwkv_channel_init(ks[1], cfg, dtype)
+    elif moe_layer:
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    else:
+        p["ffn"] = mlp_init(ks[2], d, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dtype = dtype_of(cfg.param_dtype)
+    k_embed, k_head, k_layers, k_stub, k_dense = jax.random.split(key, 5)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    n_scan = cfg.n_layers - n_dense
+    moe_layer = cfg.moe is not None and cfg.moe.n_experts > 0
+
+    layer_keys = jax.random.split(k_layers, n_scan)
+    layers = jax.vmap(lambda k: _layer_init(cfg, k, moe_layer))(layer_keys)
+
+    p: Params = {
+        "embed": embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_ln": rmsnorm_init(cfg.d_model, jnp.float32),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings and cfg.frontend != "audio":
+        p["lm_head"] = embed_init(k_head, cfg.vocab_size, cfg.d_model, dtype)
+    if n_dense:
+        dense_keys = jax.random.split(k_dense, n_dense)
+        p["dense_layers"] = [
+            _layer_init(cfg, dense_keys[i], moe_layer=False) for i in range(n_dense)]
+    if cfg.frontend == "audio":
+        p["audio"] = stubs.audio_head_init(k_stub, cfg, dtype)
+    if cfg.frontend == "vision":
+        p["vision"] = stubs.vision_proj_init(k_stub, cfg, dtype)
+    return p
+
+
+def param_count(params: Params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
+# ---------------------------------------------------------------------------
+# layer forward (full sequence, no cache)
+# ---------------------------------------------------------------------------
+
+
+def _block_full(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                window) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One layer, full sequence.  Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    if cfg.block_type == "rwkv":
+        y, _ = rwkv6.rwkv_time_forward(p["time"], cfg, rmsnorm(p["ln1"], x, cfg.rms_eps))
+        x = x + y
+        y, _ = rwkv6.rwkv_channel_forward(p["channel"], cfg, rmsnorm(p["ln2"], x, cfg.rms_eps))
+        return x + y, aux
+    h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    if cfg.block_type == "hybrid":
+        a = attn.gqa_forward(p["attn"], cfg, h, window)
+        s, _ = ssm_mod.ssm_forward(p["ssm"], cfg, h)
+        fused = 0.5 * (rmsnorm(p["fuse_ln_a"], a, cfg.rms_eps)
+                       + rmsnorm(p["fuse_ln_s"], s, cfg.rms_eps))
+        x = x + fused
+    else:
+        if cfg.mla is not None:
+            x = x + attn.mla_forward(p["attn"], cfg, h, window)
+        else:
+            x = x + attn.gqa_forward(p["attn"], cfg, h, window)
+    h2 = rmsnorm(p["ln2"], x, cfg.rms_eps)
+    if "moe" in p:
+        y, aux = moe_mod.moe_forward(p["moe"], cfg, h2)
+    else:
+        y = mlp(p["ffn"], h2)
+    out = x + y
+    if cfg.remat_policy == "names":
+        out = checkpoint_name(out, "block_out")
+    return out, aux
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embeddings -> final hidden states.  x: [B, S, d]."""
+    windows = attn.layer_windows(cfg)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+    for i in range(n_dense):
+        x, _ = _block_full(cfg, params["dense_layers"][i], x, windows[i])
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, w = xs
+        if cfg.sequence_parallel:
+            h = sequence_shard(h)
+        h, a = _block_full(cfg, layer_p, h, w)
+        if cfg.sequence_parallel:
+            h = sequence_shard(h)
+        return (h, aux + a), None
+
+    if cfg.remat_policy == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif cfg.remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            prevent_cse=False)
+    elif cfg.remat_policy == "names":
+        # save the post-collective residual stream: backward recompute then
+        # skips re-running the TP all-reduces (collective-bound cells trade
+        # ~2 [B,S,d] saves per layer for ~1/3 of the AR volume — §Perf C)
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.save_only_these_names(
+                "block_out"), prevent_cse=False)
+
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.float32(0.0)), (params["layers"], windows[n_dense:]))
+    else:
+        aux = jnp.float32(0.0)
+        L = cfg.n_layers - n_dense
+        for i in range(L):
+            layer_p = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), _ = body((x, aux), (layer_p, windows[n_dense + i]))
+    return rmsnorm(params["final_ln"], x, cfg.rms_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding per modality
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    if cfg.frontend == "audio":
+        return batch["frames"].astype(dtype_of(cfg.activ_dtype))
+    x = params["embed"][batch["tokens"]]
+    if cfg.frontend == "vision":
+        x = stubs.vision_prepend(params["vision"], batch["vision_embeds"].astype(x.dtype), x)
+    return x
+
+
+def _unembed_matrix(params: Params, cfg: ModelConfig) -> jnp.ndarray:
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def model_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Mean next-token cross-entropy (+ MoE aux)."""
+    x = embed_inputs(params, cfg, batch)
+    h, aux = forward_hidden(params, cfg, x)
+
+    if cfg.frontend == "audio":
+        logits = stubs.audio_logits(params["audio"], h[:, :-1])
+        loss = softmax_xent(logits, batch["labels"][:, 1:])
+        return loss + aux
+
+    if cfg.frontend == "vision":
+        nv = cfg.n_vision_tokens
+        h_pred = h[:, nv - 1:-1]
+        labels = batch["tokens"]
+    else:
+        h_pred = h[:, :-1]
+        labels = batch["tokens"][:, 1:]
+
+    w = _unembed_matrix(params, cfg)
+    B, S, d = h_pred.shape
+    if cfg.vocab_loss_chunk:
+        loss = chunked_softmax_xent(
+            h_pred.reshape(B * S, d), w, labels.reshape(B * S), cfg.vocab_loss_chunk)
+    else:
+        logits = jnp.einsum("bsd,vd->bsv", h_pred, w)
+        loss = softmax_xent(logits, labels)
+    return loss + aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / recurrent-state decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> Params:
+    """Stacked [L, ...] cache pytree."""
+    dtype = dtype_of(cfg.activ_dtype)
+    L = cfg.n_layers
+    if cfg.block_type == "rwkv":
+        st = rwkv6.rwkv_init_state(cfg, batch, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), st)
+    cache: Dict[str, jnp.ndarray] = {}
+    if cfg.mla is not None:
+        m = cfg.mla
+        cache["c_kv"] = jnp.zeros((L, batch, max_seq, m.kv_lora_rank), dtype)
+        cache["k_rope"] = jnp.zeros((L, batch, max_seq, m.qk_rope_head_dim), dtype)
+    else:
+        cache["k"] = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+        cache["v"] = jnp.zeros((L, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype)
+    if cfg.block_type == "hybrid":
+        st = ssm_mod.ssm_init_state(cfg, batch, dtype)
+        cache["h"] = jnp.broadcast_to(st["h"], (L,) + st["h"].shape)
+        cache["conv"] = jnp.broadcast_to(st["conv"], (L,) + st["conv"].shape)
+    return cache
+
+
+def _block_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray, cache: Dict,
+                  pos, window) -> Tuple[jnp.ndarray, Dict]:
+    """One layer, one token.  cache: this layer's slice."""
+    new_cache = dict(cache)
+    if cfg.block_type == "rwkv":
+        st = {"tm_x": cache["tm_x"], "wkv": cache["wkv"], "cm_x": cache["cm_x"]}
+        y, st_t = rwkv6.rwkv_time_forward(p["time"], cfg, rmsnorm(p["ln1"], x, cfg.rms_eps), st)
+        x = x + y
+        y, st_c = rwkv6.rwkv_channel_forward(p["channel"], cfg, rmsnorm(p["ln2"], x, cfg.rms_eps), st)
+        x = x + y
+        new_cache.update(tm_x=st_t["tm_x"], wkv=st_t["wkv"], cm_x=st_c["cm_x"])
+        return x, new_cache
+    h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    if cfg.block_type == "hybrid":
+        a, kv = attn.gqa_decode(p["attn"], cfg, h, {"k": cache["k"], "v": cache["v"]}, pos, window)
+        st = {"h": cache["h"], "conv": cache["conv"]}
+        s, st2 = ssm_mod.ssm_forward(p["ssm"], cfg, h, st)
+        fused = 0.5 * (rmsnorm(p["fuse_ln_a"], a, cfg.rms_eps)
+                       + rmsnorm(p["fuse_ln_s"], s, cfg.rms_eps))
+        x = x + fused
+        new_cache.update(k=kv["k"], v=kv["v"], h=st2["h"], conv=st2["conv"])
+    elif cfg.mla is not None:
+        y, kv = attn.mla_decode(p["attn"], cfg, h, {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]}, pos)
+        x = x + y
+        new_cache.update(c_kv=kv["c_kv"], k_rope=kv["k_rope"])
+    else:
+        y, kv = attn.gqa_decode(p["attn"], cfg, h, {"k": cache["k"], "v": cache["v"]}, pos, window)
+        x = x + y
+        new_cache.update(k=kv["k"], v=kv["v"])
+    h2 = rmsnorm(p["ln2"], x, cfg.rms_eps)
+    if "moe" in p:
+        y, _ = moe_mod.moe_forward(p["moe"], cfg, h2)
+    else:
+        y = mlp(p["ffn"], h2)
+    return x + y, new_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jnp.ndarray, pos) -> Tuple[jnp.ndarray, Params]:
+    """One decoding step.
+
+    tokens: [B, 1] int32 (or [B, 1, n_codebooks] for audio).
+    cache:  stacked [L, ...] pytree.  pos: scalar int32 (current position).
+    Returns (logits [B, V] or [B, K, V], new cache).
+    """
+    if cfg.frontend == "audio":
+        x = stubs.audio_embed_tokens(params["audio"], tokens)
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(dtype_of(cfg.activ_dtype))
+
+    windows = attn.layer_windows(cfg)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else 0
+
+    if n_dense:
+        head = {k: jax.tree.map(lambda a: a[:n_dense], v) for k, v in cache.items()}
+        tail = {k: jax.tree.map(lambda a: a[n_dense:], v) for k, v in cache.items()}
+        for i in range(n_dense):
+            sl = jax.tree.map(lambda a: a[i], head)
+            x, sl = _block_decode(cfg, params["dense_layers"][i], x, sl, pos, windows[i])
+            head = jax.tree.map(lambda buf, s: buf.at[i].set(s), head, sl)
+    else:
+        tail = cache
+
+    def body(carry, xs):
+        h = carry
+        layer_p, layer_cache, w = xs
+        h, new_c = _block_decode(cfg, layer_p, h, layer_cache, pos, w)
+        return h, new_c
+
+    x, new_tail = jax.lax.scan(body, x, (params["layers"], tail, windows[n_dense:]))
+    new_cache = new_tail
+    if n_dense:
+        new_cache = jax.tree.map(lambda hh, tt: jnp.concatenate([hh, tt], 0), head, new_tail)
+
+    h = rmsnorm(params["final_ln"], x, cfg.rms_eps)
+    if cfg.frontend == "audio":
+        logits = stubs.audio_logits(params["audio"], h)[:, 0]
+        return logits, new_cache
+    w = _unembed_matrix(params, cfg)
+    logits = jnp.einsum("bsd,vd->bsv", h, w)[:, 0]
+    return logits, new_cache
+
+
+def prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward returning last-position logits (cache is
+    rebuilt by the serving layer via decode over saved KV; for the dry-run
+    the lowered artifact of interest is the forward itself)."""
+    x = embed_inputs(params, cfg, batch)
+    h, _ = forward_hidden(params, cfg, x)
+    if cfg.frontend == "audio":
+        return stubs.audio_logits(params["audio"], h[:, -1:])[:, 0], h
+    w = _unembed_matrix(params, cfg)
+    return jnp.einsum("bd,vd->bv", h[:, -1], w), h

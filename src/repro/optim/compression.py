@@ -1,0 +1,82 @@
+"""Gradient compression for cross-pod links.
+
+Two composable transforms (used by the shard_map DP train step in
+``repro.launch.train`` when ``--compress`` is on, and unit-tested for
+convergence):
+
+* **top-k sparsification with error feedback** — keep the k largest-|g|
+  entries per tensor, accumulate the residual locally and add it back next
+  step (Stich et al.); the all-reduce then moves k values + k indices
+  instead of the dense tensor.
+* **int8 stochastic-free linear quantization** — per-tensor absmax scale;
+  psum runs on int32 accumulators (values fit: 8-bit × ≤2¹⁵ ranks).
+
+Both are exact-shape pytree transforms so they compose with any optimizer.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# top-k + error feedback
+# ---------------------------------------------------------------------------
+
+def topk_sparsify(g: jnp.ndarray, k_frac: float) -> jnp.ndarray:
+    """Zero all but the ⌈k_frac·n⌉ largest-magnitude entries (dense carrier:
+    the sparsity is what the wire format would exploit; semantics only)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * k_frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0).astype(g.dtype)
+
+
+def ef_compress(grads: Any, errors: Any, k_frac: float) -> Tuple[Any, Any]:
+    """(grads, error-carry) -> (compressed grads, new error-carry)."""
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        comp = topk_sparsify(acc, k_frac)
+        return comp.astype(g.dtype), acc - comp
+
+    pairs = jax.tree.map(one, grads, errors)
+    comp = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return comp, err
+
+
+def init_error_state(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized all-reduce
+# ---------------------------------------------------------------------------
+
+def quantize_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(g.astype(jnp.float32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def psum_int8(g: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Quantized all-reduce: a SHARED scale is agreed first (pmax of
+    per-rank absmax — one scalar all-reduce), then int8 payloads are summed
+    in int32 and dequantized once.  Error ≤ 0.5·scale per rank."""
+    s_shared = jax.lax.pmax(
+        jnp.max(jnp.abs(g.astype(jnp.float32))), axis_name) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / s_shared),
+                 -127, 127).astype(jnp.int8)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return q_sum.astype(jnp.float32) * s_shared
+
+
+def compression_ratio(k_frac: float, bits: int = 32) -> float:
+    """Wire-bytes ratio for top-k (value+index) vs dense f32."""
+    return k_frac * (bits + 32) / 32.0

@@ -1,0 +1,78 @@
+"""Checkpoint store: bit-exact roundtrip, LATEST pointer, elastic re-shard."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.checkpoint.elastic import plan_resize
+from repro.configs.base import get_config
+from repro.core.hetero import HeterogeneityProfile
+from repro.models import transformer as T
+from repro.optim.adamw import init_opt_state
+
+
+def small_state():
+    cfg = get_config("granite-3-8b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(7))
+    return cfg, (params, init_opt_state(params))
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    cfg, state = small_state()
+    store.save(str(tmp_path), 3, state, extra={"step": 3})
+    restored, extra = store.restore(str(tmp_path), state)
+    assert extra["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_latest_pointer_tracks_newest(tmp_path):
+    cfg, state = small_state()
+    store.save(str(tmp_path), 1, state)
+    store.save(str(tmp_path), 5, state)
+    assert store.latest_step(str(tmp_path)) == 5
+    restored, _ = store.restore(str(tmp_path), state)   # no error
+
+
+def test_restore_specific_step(tmp_path):
+    cfg, (params, opt) = small_state()
+    bumped = jax.tree.map(lambda x: x + 1 if x.dtype != jnp.int32 else x, params)
+    store.save(str(tmp_path), 1, params)
+    store.save(str(tmp_path), 2, bumped)
+    r1, _ = store.restore(str(tmp_path), params, step=1)
+    leaves1 = jax.tree_util.tree_leaves(r1)
+    orig = jax.tree_util.tree_leaves(params)
+    np.testing.assert_array_equal(np.asarray(leaves1[0], np.float32),
+                                  np.asarray(orig[0], np.float32))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    cfg, (params, opt) = small_state()
+    store.save(str(tmp_path), 1, params)
+    wrong = jax.tree.map(
+        lambda x: jnp.zeros((x.shape[0] + 1,) + x.shape[1:], x.dtype)
+        if x.ndim else x, params)
+    with pytest.raises(AssertionError):
+        store.restore(str(tmp_path), wrong)
+
+
+def test_resize_plan_gates_chips_and_replans():
+    import jax as _jax
+    # AbstractMesh: plan_resize only needs shapes/axis names (no devices)
+    old = _jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    new = _jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    plan = plan_resize(old, new, global_batch=16, microbatch=2,
+                       profile=HeterogeneityProfile.paper())
+    assert plan.batch_plan.step_batches == 8
+    assert plan.gated_chips == 0
+    # shrink case
+    plan2 = plan_resize(new, old, global_batch=16, microbatch=2)
+    assert plan2.batch_plan is not None
+    assert plan2.is_shrink or plan2.gated_chips == 0

@@ -1,0 +1,184 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.rwkv6_wkv.ops import wkv6
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+from repro.kernels.support_count.ops import support_count
+from repro.kernels.support_count.ref import support_count_ref
+
+
+# ---------------------------------------------------------------------------
+# support_count
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_tx,n_items,n_cand", [
+    (64, 40, 10), (512, 128, 256), (1000, 200, 37), (8, 128, 1),
+    (256, 256, 300), (17, 33, 5),
+])
+def test_support_count_shapes(n_tx, n_items, n_cand):
+    rng = np.random.default_rng(n_tx + n_items)
+    T = (rng.random((n_tx, n_items)) < 0.3).astype(np.uint8)
+    C = np.zeros((n_cand, n_items), np.uint8)
+    for m in range(n_cand):
+        C[m, rng.choice(n_items, size=rng.integers(1, 5), replace=False)] = 1
+    got = np.asarray(support_count(jnp.asarray(T), jnp.asarray(C)))
+    want = np.asarray(support_count_ref(jnp.asarray(T), jnp.asarray(C)))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_support_count_empty_and_full_rows():
+    T = np.zeros((16, 128), np.uint8)
+    T[0] = 1
+    C = np.eye(128, dtype=np.uint8)[:4]
+    got = np.asarray(support_count(jnp.asarray(T), jnp.asarray(C)))
+    np.testing.assert_array_equal(got, np.ones(4, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,KV,hd,win,dtype", [
+    (1, 128, 4, 2, 64, 0, jnp.float32),
+    (2, 256, 4, 1, 32, 0, jnp.float32),
+    (1, 128, 2, 2, 64, 48, jnp.float32),
+    (1, 256, 8, 8, 128, 0, jnp.bfloat16),
+    (2, 64, 4, 4, 64, 16, jnp.bfloat16),
+])
+def test_flash_attention_vs_ref(B, S, H, KV, hd, win, dtype):
+    rng = np.random.default_rng(S + H)
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), dtype)
+    got = flash_attention(q, k, v, window=win, bq=64, bk=64)
+    want = flash_attention_ref(q, k, v, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_independence():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, 256, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 256, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 256, 2, 32)), jnp.float32)
+    a = flash_attention(q, k, v, bq=64, bk=64)
+    b = flash_attention(q, k, v, bq=128, bk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,H,n,chunk", [
+    (1, 64, 2, 16, 16), (2, 128, 4, 64, 32), (1, 96, 1, 32, 32),
+    (1, 64, 2, 64, 64),
+])
+def test_wkv6_vs_sequential_ref(B, T, H, n, chunk):
+    rng = np.random.default_rng(T + n)
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, H, n)) * 0.5, jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((B, T, H, n)) * 0.5 - 1.0)),
+                    jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, n)) * 0.5, jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((B, H, n, n)) * 0.1, jnp.float32)
+    y, sf = wkv6(r, k, v, w, u, s0, chunk=chunk)
+    yr, sfr = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sf), np.asarray(sfr), atol=5e-4)
+
+
+def test_wkv6_chunk_boundary_equivalence():
+    """Same input, different chunk sizes -> identical recurrence."""
+    rng = np.random.default_rng(5)
+    B, T, H, n = 1, 128, 2, 32
+    args = [jnp.asarray(rng.standard_normal((B, T, H, n)) * 0.4, jnp.float32)
+            for _ in range(3)]
+    w = jnp.asarray(np.exp(-np.exp(rng.standard_normal((B, T, H, n)) - 1)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((H, n)) * 0.3, jnp.float32)
+    y16, s16 = wkv6(*args, w, u, chunk=16)
+    y64, s64 = wkv6(*args, w, u, chunk=64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s16), np.asarray(s64), atol=5e-4)
+
+
+def test_wkv6_extreme_decay_stable():
+    """Near-zero and near-one decays must not produce inf/nan."""
+    B, T, H, n = 1, 64, 1, 16
+    rng = np.random.default_rng(9)
+    r, k, v = (jnp.asarray(rng.standard_normal((B, T, H, n)), jnp.float32)
+               for _ in range(3))
+    w = jnp.asarray(np.where(rng.random((B, T, H, n)) < 0.5, 0.01, 0.9999),
+                    jnp.float32)
+    u = jnp.zeros((H, n), jnp.float32)
+    y, sf = wkv6(r, k, v, w, u, chunk=32)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(sf)).all()
+    yr, _ = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# selective_scan (Mamba/Hymba SSM)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+
+
+@pytest.mark.parametrize("B,T,D,N,c,dk", [
+    (1, 64, 64, 16, 16, 64), (2, 128, 128, 16, 32, 64), (1, 48, 32, 8, 16, 32),
+    (1, 64, 64, 4, 64, 16),
+])
+def test_selective_scan_vs_ref(B, T, D, N, c, dk):
+    rng = np.random.default_rng(T + D)
+    a = jnp.asarray(np.exp(-np.exp(rng.standard_normal((B, T, D, N)) * 0.5 - 1)),
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, T, D, N)) * 0.3, jnp.float32)
+    C = jnp.asarray(rng.standard_normal((B, T, N)), jnp.float32)
+    h0 = jnp.asarray(rng.standard_normal((B, D, N)) * 0.2, jnp.float32)
+    y, hf = selective_scan(a, b, C, h0, chunk=c, d_blk=dk)
+    yr, hfr = selective_scan_ref(a, b, C, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(hfr), atol=1e-4)
+
+
+def test_selective_scan_matches_model_ssm_math():
+    """Kernel == the model's _selective_scan on the same a/b decomposition."""
+    from repro.models.ssm import _selective_scan
+    rng = np.random.default_rng(11)
+    B, S, di, N = 1, 64, 32, 8
+    u = jnp.asarray(rng.standard_normal((B, S, di)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((B, S, di))) * 0.2 + 0.01,
+                     jnp.float32)
+    A = -jnp.asarray(np.abs(rng.standard_normal((di, N))) + 0.1, jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.standard_normal((B, S, N)), jnp.float32)
+    Dv = jnp.asarray(rng.standard_normal(di), jnp.float32)
+    y_model, h_model = _selective_scan(u, dt, A, Bm, Cm, Dv)
+    a = jnp.exp(dt[..., None] * A[None, None])
+    b = dt[..., None] * Bm[:, :, None, :] * u[..., None]
+    y_k, h_k = selective_scan(a, b, Cm, chunk=16, d_blk=32)
+    y_k = y_k + Dv[None, None] * u
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_model), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_model), atol=2e-4)
+
+
+def test_selective_scan_extreme_decay_stable():
+    B, T, D, N = 1, 32, 16, 4
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(np.where(rng.random((B, T, D, N)) < 0.5, 1e-4, 0.99999),
+                    jnp.float32)
+    b = jnp.asarray(rng.standard_normal((B, T, D, N)), jnp.float32)
+    C = jnp.asarray(rng.standard_normal((B, T, N)), jnp.float32)
+    y, hf = selective_scan(a, b, C, chunk=16, d_blk=16)
+    assert np.isfinite(np.asarray(y)).all()
+    yr, _ = selective_scan_ref(a, b, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)

@@ -1,0 +1,95 @@
+"""MapReduce engine: result correctness under any schedule/failures, and
+combiner associativity (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.mapreduce import (FailureEvent, MapReduceJob,
+                                  SimulatedCluster)
+from repro.core.power import PowerModel
+from repro.core.scheduler import MBScheduler
+
+
+def word_count_job(n_items):
+    return MapReduceJob(
+        name="wc",
+        map_fn=lambda tile: np.bincount(tile, minlength=n_items),
+        combine_fn=lambda a, b: a + b,
+        zero_fn=lambda: np.zeros(n_items, np.int64),
+        cost_fn=lambda tile: float(len(tile)),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 40), st.integers(0, 2**31 - 1),
+       st.sampled_from(["lpt", "proportional", "equal"]))
+def test_result_independent_of_schedule(n_dev, n_tiles, seed, policy):
+    rng = np.random.default_rng(seed)
+    tiles = [rng.integers(0, 16, rng.integers(1, 50)) for _ in range(n_tiles)]
+    want = np.bincount(np.concatenate(tiles), minlength=16)
+    profile = HeterogeneityProfile(rng.uniform(0.5, 8.0, n_dev))
+    cluster = SimulatedCluster(profile, MBScheduler(profile, policy))
+    got, rep = cluster.run(word_count_job(16), tiles)
+    assert (got == want).all()
+    assert rep.makespan > 0
+
+
+def test_failure_recovery_preserves_result():
+    rng = np.random.default_rng(3)
+    tiles = [rng.integers(0, 8, 20) for _ in range(24)]
+    want = np.bincount(np.concatenate(tiles), minlength=8)
+    profile = HeterogeneityProfile.paper()
+    cluster = SimulatedCluster(profile)
+    got, rep = cluster.run(word_count_job(8), tiles,
+                           failures=[FailureEvent(device=3, at_time=0.01)])
+    assert (got == want).all()
+    assert rep.failed_devices == [3]
+    assert rep.switches > 0          # orphaned tiles were re-assigned
+
+
+def test_all_devices_dead_raises():
+    profile = HeterogeneityProfile.homogeneous(2)
+    cluster = SimulatedCluster(profile)
+    tiles = [np.ones(10, np.int64)] * 4
+    with pytest.raises(RuntimeError):
+        cluster.run(word_count_job(2), tiles,
+                    failures=[FailureEvent(0, 0.0), FailureEvent(1, 0.0)])
+
+
+def test_failure_slows_makespan():
+    rng = np.random.default_rng(1)
+    tiles = [rng.integers(0, 8, 100) for _ in range(32)]
+    profile = HeterogeneityProfile.homogeneous(4, 100.0)
+    c1 = SimulatedCluster(profile.copy())
+    _, rep_ok = c1.run(word_count_job(8), tiles)
+    c2 = SimulatedCluster(profile.copy())
+    _, rep_fail = c2.run(word_count_job(8), tiles,
+                         failures=[FailureEvent(device=0, at_time=rep_ok.makespan / 2)])
+    assert rep_fail.makespan >= rep_ok.makespan
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=30),
+       st.integers(0, 2**31 - 1))
+def test_combiner_associativity(values, seed):
+    """Combine in two different groupings -> same result."""
+    job = word_count_job(101)
+    tiles = [np.array([v]) for v in values]
+    left = job.zero_fn()
+    for t in tiles:
+        left = job.combine_fn(left, job.map_fn(t))
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(len(tiles))
+    right = job.zero_fn()
+    for i in order:
+        right = job.combine_fn(right, job.map_fn(tiles[i]))
+    assert (left == right).all()
+
+
+def test_energy_accounting_present():
+    profile = HeterogeneityProfile.paper()
+    cluster = SimulatedCluster(profile, power=PowerModel.cpu(profile))
+    tiles = [np.ones(10, np.int64)] * 8
+    _, rep = cluster.run(word_count_job(2), tiles)
+    assert rep.energy_j is not None and rep.energy_j > 0

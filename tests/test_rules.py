@@ -1,0 +1,61 @@
+"""Association-rule generation (paper step 3) vs direct probability math."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.itemsets import apriori
+from repro.core.rules import generate_rules
+
+
+def db_with_implication(n=400, noise=0.05, seed=0):
+    """Item 0 implies item 1 ~always; items 2,3 independent."""
+    rng = np.random.default_rng(seed)
+    T = np.zeros((n, 4), np.uint8)
+    has0 = rng.random(n) < 0.4
+    T[:, 0] = has0
+    T[:, 1] = has0 | (rng.random(n) < noise)
+    T[:, 2] = rng.random(n) < 0.3
+    T[:, 3] = rng.random(n) < 0.3
+    return T
+
+
+def test_confidence_and_lift_exact():
+    T = db_with_implication()
+    res = apriori(T, min_support=10)
+    rules = generate_rules(res, min_confidence=0.0)
+    n = float(len(T))
+    for r in rules:
+        both = tuple(sorted(r.antecedent + r.consequent))
+        s_both = res.supports[both]
+        s_a = res.supports[r.antecedent]
+        s_b = res.supports[r.consequent]
+        assert r.confidence == pytest.approx(s_both / s_a)
+        assert r.support == pytest.approx(s_both / n)
+        assert r.lift == pytest.approx((s_both / s_a) / (s_b / n))
+
+
+def test_implication_is_top_rule():
+    T = db_with_implication()
+    res = apriori(T, min_support=10)
+    rules = generate_rules(res, min_confidence=0.8)
+    assert rules, "expected at least the 0=>1 rule"
+    top = rules[0]
+    assert top.antecedent == (0,) and top.consequent == (1,)
+    assert top.confidence > 0.9
+
+
+def test_min_confidence_filters():
+    T = db_with_implication()
+    res = apriori(T, min_support=10)
+    for thresh in (0.2, 0.5, 0.9):
+        for r in generate_rules(res, min_confidence=thresh):
+            assert r.confidence >= thresh
+
+
+def test_independent_items_have_lift_near_one():
+    T = db_with_implication(n=4000)
+    res = apriori(T, min_support=20)
+    rules = generate_rules(res, min_confidence=0.0)
+    for r in rules:
+        if set(r.antecedent) | set(r.consequent) == {2, 3}:
+            assert r.lift == pytest.approx(1.0, abs=0.35)

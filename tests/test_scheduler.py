@@ -1,0 +1,123 @@
+"""MB Scheduler property tests (hypothesis): assignment completeness, LPT
+quality bounds, proportionality, rebalancing conservation, speculation."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hetero import PAPER_CORES, HeterogeneityProfile
+from repro.core.scheduler import MBScheduler, TaskSpec, simulate_makespan
+
+
+@st.composite
+def profiles(draw):
+    n = draw(st.integers(2, 12))
+    speeds = draw(st.lists(st.floats(0.1, 100.0), min_size=n, max_size=n))
+    return HeterogeneityProfile(np.array(speeds))
+
+
+@st.composite
+def tile_cost_arrays(draw):
+    n = draw(st.integers(1, 200))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["uniform", "skewed", "equal"]))
+    if kind == "equal":
+        return np.full(n, 10.0)
+    if kind == "skewed":
+        return rng.zipf(1.7, n).astype(np.float64)
+    return rng.uniform(1, 100, n)
+
+
+@settings(max_examples=50, deadline=None)
+@given(profiles(), tile_cost_arrays(),
+       st.sampled_from(["lpt", "proportional", "equal"]))
+def test_every_tile_assigned_exactly_once(profile, costs, policy):
+    sched = MBScheduler(profile, policy=policy)
+    task = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    asg = sched.assign_parallel(task, costs)
+    seen = sorted(t for ts in asg.tiles_of for t in ts)
+    assert seen == list(range(len(costs)))
+
+
+@settings(max_examples=50, deadline=None)
+@given(profiles(), tile_cost_arrays())
+def test_lpt_quality_bound(profile, costs):
+    """Greedy EFT on uniform machines has makespan <= 2x the lower bound
+    max(total/Σspeed, max_tile/max_speed)."""
+    sched = MBScheduler(profile, policy="lpt")
+    task = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    asg = sched.assign_parallel(task, costs)
+    lb = sched.makespan_lower_bound(costs)
+    assert asg.makespan <= 2.0 * lb + 1e-9
+
+
+@settings(max_examples=50, deadline=None)
+@given(profiles(), tile_cost_arrays())
+def test_lpt_never_worse_than_equal_split(profile, costs):
+    t = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    m_lpt = MBScheduler(profile, "lpt").assign_parallel(t, costs).makespan
+    m_eq = MBScheduler(profile, "equal").assign_parallel(t, costs).makespan
+    assert m_lpt <= m_eq + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(profiles(), st.integers(10, 400))
+def test_proportional_shares(profile, n_tiles):
+    """Uniform tiles: per-device tile counts within 1 of speed-proportional."""
+    sched = MBScheduler(profile, policy="proportional")
+    task = TaskSpec("t", float(n_tiles), parallel=True, n_tiles=n_tiles)
+    asg = sched.assign_parallel(task)
+    shares = profile.shares() * n_tiles
+    for d, tiles in enumerate(asg.tiles_of):
+        assert abs(len(tiles) - shares[d]) <= 1.0 + 1e-9
+
+
+def test_paper_four_core_example():
+    """Paper §V: 80/120/200/400 cores.  Equal split is 2.5x slower than a
+    proportional split (800/(4*80) = 2.5)."""
+    profile = HeterogeneityProfile.paper()
+    costs = np.full(80, 10.0)
+    t = TaskSpec("mba", 800.0, parallel=True, n_tiles=80)
+    m_eq = MBScheduler(profile, "equal").assign_parallel(t, costs).makespan
+    m_prop = MBScheduler(profile, "proportional").assign_parallel(t, costs).makespan
+    assert m_prop == pytest.approx(800.0 / sum(PAPER_CORES), rel=0.1)
+    assert m_eq / m_prop == pytest.approx(2.5, rel=0.1)
+
+
+def test_serial_task_picks_best_core_and_gates_rest():
+    profile = HeterogeneityProfile.paper()
+    sched = MBScheduler(profile)
+    asg = sched.assign_serial(TaskSpec("serial", 100.0, parallel=False))
+    assert asg.serial_device == 3          # the 400 core
+    assert sorted(asg.gated) == [0, 1, 2]
+    assert asg.makespan == pytest.approx(100.0 / 400.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(profiles(), tile_cost_arrays())
+def test_rebalance_conserves_tiles(profile, costs):
+    sched = MBScheduler(profile, policy="lpt")
+    task = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    asg = sched.assign_parallel(task, costs)
+    # dynamic switching: speeds change, re-plan
+    profile.observe(0, work_done=1.0, seconds=50.0)
+    new, moved = sched.rebalance(task, asg, costs)
+    seen = sorted(t for ts in new.tiles_of for t in ts)
+    assert seen == list(range(len(costs)))
+    assert moved == sched.switches
+
+
+def test_ewma_observe_moves_towards_rate():
+    p = HeterogeneityProfile(np.array([10.0, 10.0]))
+    p.observe(0, work_done=100.0, seconds=100.0)   # rate 1.0 << 10
+    assert p.speeds[0] < 10.0
+    assert p.speeds[1] == 10.0
+
+
+def test_makespan_simulation_matches_estimate():
+    profile = HeterogeneityProfile.paper()
+    costs = np.random.default_rng(0).uniform(1, 20, 37)
+    sched = MBScheduler(profile, policy="lpt")
+    asg = sched.assign_parallel(
+        TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=37), costs)
+    assert simulate_makespan(asg, costs, profile) == pytest.approx(asg.makespan)
