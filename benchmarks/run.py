@@ -6,14 +6,15 @@
   B3 bench_power      — gating / switching energy (paper §VI)
   B4 bench_kernels    — Pallas hot-spots vs jnp oracle + TPU roofline
   B5 bench_roofline   — dry-run roofline table reader
+  B6 bench_pipeline   — end-to-end MarketBasketPipeline (policies, scaling)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 """
 import argparse
 import sys
 
-from benchmarks import (bench_apriori, bench_kernels, bench_power,
-                        bench_roofline, bench_scheduler)
+from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
+                        bench_power, bench_roofline, bench_scheduler)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -21,6 +22,7 @@ SUITES = {
     "B3": ("power", bench_power.run),
     "B4": ("kernels", bench_kernels.run),
     "B5": ("roofline", bench_roofline.run),
+    "B6": ("pipeline", bench_pipeline.run),
 }
 
 

@@ -1,9 +1,12 @@
-"""Checkpoint store: atomic, manifest-driven, zstd-compressed msgpack.
+"""Checkpoint store: atomic, manifest-driven msgpack, zstd-compressed when
+``zstandard`` is installed (raw msgpack otherwise — the codec is recorded in
+the manifest, so mixed environments restore each other's checkpoints as long
+as the reader has the writer's codec).
 
 Layout:
   <dir>/step_000123/
-    manifest.json            # tree structure, shapes, dtypes, step, config id
-    arrays.msgpack.zst       # flat {key: bytes} in deterministic order
+    manifest.json            # tree structure, shapes, dtypes, step, codec
+    arrays.msgpack.zst       # flat {key: bytes} (or arrays.msgpack, raw)
   <dir>/LATEST               # atomically-updated pointer (two-phase commit)
 
 Restore is mesh-agnostic: arrays come back as numpy and are re-sharded by
@@ -21,10 +24,34 @@ from typing import Any, Dict, Optional, Tuple
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+    HAVE_ZSTD = True
+except ImportError:          # optional dependency — fall back to raw msgpack
+    zstd = None
+    HAVE_ZSTD = False
 
 import jax
 import jax.numpy as jnp
+
+_CODEC_FILES = {"zstd": "arrays.msgpack.zst", "raw": "arrays.msgpack"}
+
+
+def _encode(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        return zstd.ZstdCompressor(level=3).compress(blob)
+    return blob
+
+
+def _decode(blob: bytes, codec: str) -> bytes:
+    if codec == "zstd":
+        if not HAVE_ZSTD:
+            raise ImportError(
+                "checkpoint was written with the zstd codec but the "
+                "'zstandard' package is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return blob
 
 
 def _flatten(tree: Any):
@@ -36,13 +63,21 @@ def _flatten(tree: Any):
     return flat, jax.tree_util.tree_structure(tree)
 
 
-def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
+         codec: Optional[str] = None) -> str:
+    if codec is None:
+        codec = "zstd" if HAVE_ZSTD else "raw"
+    if codec not in _CODEC_FILES:
+        raise ValueError(f"unknown codec {codec!r}")
+    if codec == "zstd" and not HAVE_ZSTD:
+        raise ImportError("codec='zstd' requires the 'zstandard' package")
     flat, _ = _flatten(tree)
     step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
     tmp = step_dir + ".tmp"
     os.makedirs(tmp, exist_ok=True)
 
-    manifest = {"step": step, "extra": extra or {}, "arrays": {}}
+    manifest = {"step": step, "extra": extra or {}, "codec": codec,
+                "arrays": {}}
     payload: Dict[str, bytes] = {}
     for key in sorted(flat):
         arr = np.asarray(flat[key])
@@ -54,9 +89,8 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None) -> s
                                    "orig_dtype": tag}
         payload[key] = arr.tobytes()
 
-    comp = zstd.ZstdCompressor(level=3)
-    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
-        f.write(comp.compress(msgpack.packb(payload)))
+    with open(os.path.join(tmp, _CODEC_FILES[codec]), "wb") as f:
+        f.write(_encode(msgpack.packb(payload), codec))
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
 
@@ -91,9 +125,11 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
     step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
-    dec = zstd.ZstdDecompressor()
-    with open(os.path.join(step_dir, "arrays.msgpack.zst"), "rb") as f:
-        payload = msgpack.unpackb(dec.decompress(f.read()))
+    codec = manifest.get("codec", "zstd")   # pre-codec checkpoints were zstd
+    if codec not in _CODEC_FILES:
+        raise ValueError(f"checkpoint {step_dir} uses unknown codec {codec!r}")
+    with open(os.path.join(step_dir, _CODEC_FILES[codec]), "rb") as f:
+        payload = msgpack.unpackb(_decode(f.read(), codec))
 
     flat_like, _ = _flatten(like)
     flat_shard, _ = _flatten(shardings) if shardings is not None else ({}, None)

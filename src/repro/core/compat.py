@@ -1,0 +1,62 @@
+"""JAX version compatibility shims.
+
+The codebase targets the current jax API (``jax.set_mesh``,
+``jax.sharding.get_abstract_mesh``, ``jax.lax.axis_size``); this container
+ships jax 0.4.37, where the ambient-mesh machinery is still private.  Every
+fallback here routes through one function so call sites stay clean and the
+shims can be deleted wholesale once the floor moves past 0.5.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+
+def axis_size(axis_name: str) -> int:
+    """Size of a bound mesh axis inside shard_map (jax >= 0.5 has
+    lax.axis_size; 0.4.x resolves psum-of-1 statically)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axes):
+    """jax.make_mesh with explicit Auto axis types where supported
+    (jax >= 0.5); 0.4.x has no AxisType and defaults are equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def get_abstract_mesh():
+    """The ambient abstract mesh, or an empty/None mesh outside a context."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    from jax._src import mesh as _mesh_lib
+    mesh = _mesh_lib.get_abstract_mesh()
+    # 0.4.x holds a bare () sentinel outside any context — map it to None
+    if not getattr(mesh, "axis_names", None):
+        return None
+    return mesh
+
+
+def mesh_context(mesh):
+    """Context manager making `mesh` ambient: sharding constraints may use
+    bare PartitionSpecs and ``get_abstract_mesh`` sees it."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+
+    from jax._src import mesh as _mesh_lib
+
+    @contextlib.contextmanager
+    def _ctx():
+        # 0.4.x: the physical mesh enables bare-P sharding constraints, the
+        # abstract mesh feeds get_abstract_mesh() consumers.
+        with mesh, _mesh_lib.set_abstract_mesh(mesh.abstract_mesh):
+            yield
+
+    return _ctx()

@@ -10,6 +10,13 @@ Control plane (host): level-k candidate *generation* (the classic
 F_{k-1}⋈F_{k-1} join + downward-closure prune) is tiny serial work — the
 paper's "single-threaded task", which the MB Scheduler routes to one core
 while gating the rest (power model hook).
+
+``apriori`` below is the minimal reference driver (used by the property
+tests and B1 bench); the production path with full scheduling/energy
+accounting, data-plane batching and rule extraction is
+``repro.pipeline.MarketBasketPipeline``, which shares this module's
+candidate generation.  Behavioral changes to round semantics belong in
+both, and each is pinned to the same brute-force oracle by tests.
 """
 from __future__ import annotations
 
@@ -82,6 +89,15 @@ def itemsets_to_bitmap(itemsets: Sequence[Tuple[int, ...]], n_items: int) -> np.
 # the level-wise Apriori driver (paper §V steps 1-2)
 # ---------------------------------------------------------------------------
 
+def frequent_itemsets(supports: Dict[Tuple[int, ...], int],
+                      k: Optional[int] = None) -> List[Tuple[int, ...]]:
+    """Sorted frequent itemsets from a supports dict, optionally one level."""
+    items = supports.keys()
+    if k is not None:
+        items = (s for s in items if len(s) == k)
+    return sorted(items)
+
+
 @dataclass
 class AprioriResult:
     supports: Dict[Tuple[int, ...], int]      # itemset -> absolute support
@@ -90,10 +106,7 @@ class AprioriResult:
     reports: list = field(default_factory=list)
 
     def frequent(self, k: Optional[int] = None) -> List[Tuple[int, ...]]:
-        items = self.supports.keys()
-        if k is not None:
-            items = (s for s in items if len(s) == k)
-        return sorted(items)
+        return frequent_itemsets(self.supports, k)
 
 
 def _tile_rows(T: np.ndarray, n_tiles: int) -> List[np.ndarray]:

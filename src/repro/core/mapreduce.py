@@ -59,6 +59,9 @@ class ExecReport:
     failed_devices: List[int] = field(default_factory=list)
     energy_j: Optional[float] = None
     assignment: Optional[Assignment] = None
+    tiles_done: Optional[List[int]] = None   # tiles *executed* per device
+    # (differs from assignment.tiles_of after failures: orphaned tiles are
+    # counted at the survivor that re-ran them)
 
 
 @dataclass
@@ -109,6 +112,7 @@ class SimulatedCluster:
         alive = [d for d in range(D)]
         switches, reissued = 0, 0
         pending = {t for q in queues for t in q}
+        done_by = [0] * D
 
         def run_queue(d: int):
             nonlocal switches
@@ -122,6 +126,7 @@ class SimulatedCluster:
                 clock[d] += dt
                 busy[d] += dt
                 done.add(t)
+                done_by[d] += 1
                 pending.discard(t)
             return True
 
@@ -145,6 +150,7 @@ class SimulatedCluster:
                 clock[d] += dt
                 busy[d] += dt
                 done.add(t)
+                done_by[d] += 1
                 switches += 1
             pending.difference_update(orphans)
             orphans = []
@@ -164,9 +170,12 @@ class SimulatedCluster:
                     makespan = float(max(np.delete(clock, slowest).max() if D > 1 else 0.0,
                                          min(orig, alt),
                                          clock[slowest] - tile_costs[t] / speeds[slowest]))
+        # switches is per-run (this job's re-planned tiles only); the
+        # scheduler keeps its own lifetime counter for rebalance/speculate
         return ExecReport(makespan=makespan, busy_s=busy,
-                          switches=switches + self.scheduler.switches,
-                          reissued=reissued, failed_devices=dead)
+                          switches=switches,
+                          reissued=reissued, failed_devices=dead,
+                          tiles_done=done_by)
 
 
 # ---------------------------------------------------------------------------

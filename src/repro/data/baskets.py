@@ -8,7 +8,7 @@ association rules the paper mines.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,6 +38,27 @@ def generate_baskets(cfg: BasketConfig) -> np.ndarray:
             T[t, pat[keep]] = 1
         noise = rng.zipf(cfg.zipf_a, size=cfg.noise_items) % cfg.n_items
         T[t, noise] = 1
+    return T
+
+
+def pack_transactions(transactions: Sequence[Sequence[int]],
+                      n_items: Optional[int] = None) -> np.ndarray:
+    """Pack variable-length transactions (sequences of item ids) into the
+    dense 0/1 bitmap the data plane consumes.  Duplicate items within one
+    transaction collapse to a single bit (set semantics)."""
+    if n_items is None:
+        n_items = 1 + max((max(tx) for tx in transactions if len(tx)),
+                          default=-1)
+    T = np.zeros((len(transactions), max(n_items, 1)), dtype=np.uint8)
+    for t, tx in enumerate(transactions):
+        if not len(tx):
+            continue
+        idx = np.asarray(list(tx))
+        if idx.min() < 0 or idx.max() >= n_items:
+            raise ValueError(
+                f"item ids must be in [0, {n_items}) — negative or oversized "
+                "ids would land in the wrong bitmap column")
+        T[t, idx] = 1
     return T
 
 

@@ -83,7 +83,8 @@ def lower_cell(arch: str, shape_name: str, mesh, profile: str = "tuned",
                    "grad_accum": opts.get("grad_accum", 1)},
     }
     t0 = time.time()
-    ctx = jax.set_mesh(mesh)          # ambient mesh for sequence_shard
+    from repro.core.compat import mesh_context
+    ctx = mesh_context(mesh)          # ambient mesh for sequence_shard
     ctx.__enter__()
 
     if shape.kind == "train":
@@ -135,6 +136,8 @@ def lower_cell(arch: str, shape_name: str, mesh, profile: str = "tuned",
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax 0.4.x: one dict per device
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     hc = H.analyze(hlo)                    # trip-count-corrected HLO cost
 

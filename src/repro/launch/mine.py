@@ -1,6 +1,6 @@
 """The paper's job, end to end: mine association rules from a transactional
-database with the 3-step MapReduce pipeline under the MB Scheduler on a
-heterogeneous core profile.
+database through :class:`repro.pipeline.MarketBasketPipeline` (MapReduce
+Apriori under the MB Scheduler on a heterogeneous core profile).
 
   PYTHONPATH=src python -m repro.launch.mine --n-tx 8192 --n-items 128 \
       --min-support 0.02 --min-confidence 0.6 --profile paper --policy lpt
@@ -8,58 +8,39 @@ heterogeneous core profile.
 from __future__ import annotations
 
 import argparse
-import time
-
-import numpy as np
 
 from repro.core.hetero import HeterogeneityProfile
-from repro.core.itemsets import apriori
-from repro.core.mapreduce import SimulatedCluster
-from repro.core.power import PowerModel
-from repro.core.rules import generate_rules
-from repro.core.scheduler import MBScheduler
-from repro.data.baskets import BasketConfig, generate_baskets, pad_items
+from repro.data.baskets import BasketConfig, generate_baskets
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+
+
+PROFILES = {
+    "paper": HeterogeneityProfile.paper,
+    "homogeneous": lambda: HeterogeneityProfile.homogeneous(4, 200.0),
+    "straggler": lambda: HeterogeneityProfile.straggler(8, 2, 4.0),
+}
 
 
 def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          min_confidence: float = 0.6, profile_name: str = "paper",
-         policy: str = "lpt", n_tiles: int = 32, use_pallas: bool = False,
+         policy: str = "lpt", n_tiles: int = 32, data_plane: str = "auto",
          seed: int = 0, top: int = 15):
-    profiles = {
-        "paper": HeterogeneityProfile.paper,
-        "homogeneous": lambda: HeterogeneityProfile.homogeneous(4, 200.0),
-        "straggler": lambda: HeterogeneityProfile.straggler(8, 2, 4.0),
-    }
-    profile = profiles[profile_name]()
+    profile = PROFILES[profile_name]()
     print(f"[mine] profile={profile_name} speeds={profile.speeds.tolist()} "
           f"policy={policy}")
 
     T = generate_baskets(BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed))
-    T = pad_items(T)
-    min_sup_abs = max(1, int(min_support * n_tx))
+    pipe = MarketBasketPipeline(
+        profile,
+        PipelineConfig(min_support=min_support, min_confidence=min_confidence,
+                       n_tiles=n_tiles, policy=policy, data_plane=data_plane))
+    result = pipe.run(T)
 
-    sched = MBScheduler(profile, policy=policy)
-    cluster = SimulatedCluster(profile, scheduler=sched,
-                               power=PowerModel.cpu(profile))
-    t0 = time.time()
-    result = apriori(T, min_sup_abs, cluster=cluster, n_tiles=n_tiles,
-                     use_pallas=use_pallas)
-    wall = time.time() - t0
-    rules = generate_rules(result, min_confidence)
-
-    sim_time = sum(rep.makespan for _, rep in result.reports)
-    energy = sum(rep.energy_j or 0.0 for _, rep in result.reports)
-    print(f"[mine] {len(result.supports)} frequent itemsets "
-          f"(levels 1..{result.levels}), {len(rules)} rules, "
-          f"wall {wall:.2f}s, simulated cluster makespan {sim_time:.4f}s, "
-          f"energy {energy:.1f} J")
-    for tag, rep in result.reports:
-        print(f"    {tag}: makespan={rep.makespan:.4f}s "
-              f"switches={rep.switches} reissued={rep.reissued}")
+    print(result.report.summary())
     print(f"[mine] top rules (min_conf={min_confidence}):")
-    for r in rules[:top]:
+    for r in result.rules[:top]:
         print("   ", r)
-    return result, rules
+    return result
 
 
 def main():
@@ -68,16 +49,16 @@ def main():
     ap.add_argument("--n-items", type=int, default=128)
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--min-confidence", type=float, default=0.6)
-    ap.add_argument("--profile", default="paper",
-                    choices=["paper", "homogeneous", "straggler"])
+    ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
     ap.add_argument("--policy", default="lpt",
                     choices=["lpt", "proportional", "equal"])
     ap.add_argument("--n-tiles", type=int, default=32)
-    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--data-plane", default="auto",
+                    choices=["auto", "pallas", "ref"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     mine(args.n_tx, args.n_items, args.min_support, args.min_confidence,
-         args.profile, args.policy, args.n_tiles, args.use_pallas, args.seed)
+         args.profile, args.policy, args.n_tiles, args.data_plane, args.seed)
 
 
 if __name__ == "__main__":

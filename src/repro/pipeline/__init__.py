@@ -1,0 +1,11 @@
+"""End-to-end market-basket pipeline (paper §V composed as one object)."""
+from repro.pipeline.dataplane import DataPlane, resolve_backend, uniform_tiles
+from repro.pipeline.pipeline import (MarketBasketPipeline, PipelineConfig,
+                                     PipelineResult)
+from repro.pipeline.report import (PipelineReport, RoundReport, SerialPhase)
+
+__all__ = [
+    "DataPlane", "MarketBasketPipeline", "PipelineConfig", "PipelineReport",
+    "PipelineResult", "RoundReport", "SerialPhase", "resolve_backend",
+    "uniform_tiles",
+]

@@ -1,0 +1,107 @@
+"""Data plane for the pipeline: candidate support counting with stable shapes.
+
+The paper's hot spot (Apriori step 2) runs on one of two backends:
+
+* ``pallas`` — the MXU kernel in :mod:`repro.kernels.support_count` (the
+  default on TPU; forced elsewhere it runs in interpret mode, which is only
+  useful for tests).
+* ``ref`` — the jitted pure-jnp oracle (the automatic off-TPU fallback).
+
+Shape discipline is what makes either backend cheap across Apriori levels:
+XLA recompiles per distinct input shape, so the pipeline (a) splits the
+transaction bitmap into *uniform* row tiles and (b) pads every level's
+candidate matrix up to a multiple of ``m_bucket`` rows.  Levels whose
+candidate counts land in the same bucket then hit the same jit-cache entry
+— one compiled kernel serves the whole mining run.
+
+Padded candidate rows are all-zero; an all-zero mask would match every
+transaction (``dot == |c| == 0``), so counts are always sliced back to the
+true candidate count rather than trusting zeros.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.support_count.ops import support_count as _pallas_count
+from repro.kernels.support_count.ref import support_count_ref as _ref_count
+
+_jitted_ref = jax.jit(_ref_count)
+
+
+def resolve_backend(kind: str = "auto") -> str:
+    """'auto' → pallas on TPU, ref elsewhere; 'pallas'/'ref' force."""
+    if kind == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if kind not in ("pallas", "ref"):
+        raise ValueError(f"unknown data plane {kind!r}")
+    return kind
+
+
+def pad_candidates(C: np.ndarray, m_bucket: int) -> np.ndarray:
+    """Pad the candidate axis up to a multiple of m_bucket with zero rows."""
+    m = C.shape[0]
+    pad = (-m) % m_bucket
+    if pad == 0:
+        return C
+    return np.pad(C, ((0, pad), (0, 0)))
+
+
+def uniform_tiles(T: np.ndarray, n_tiles: int,
+                  row_multiple: int = 8) -> List[np.ndarray]:
+    """Split T into n_tiles row tiles of identical shape (zero-row padded).
+
+    Identical tile shapes are a jit-cache requirement, and all-zero padding
+    rows are inert: they contain no items, so they can only support the
+    empty itemset, which Apriori never emits (k >= 1).
+    """
+    n_tx = T.shape[0]
+    n_tiles = max(1, min(n_tiles, n_tx))
+    rows = -(-n_tx // n_tiles)                    # ceil
+    rows += (-rows) % row_multiple                # kernel sublane alignment
+    padded = np.pad(T, ((0, rows * n_tiles - n_tx), (0, 0)))
+    return [np.ascontiguousarray(padded[i * rows:(i + 1) * rows])
+            for i in range(n_tiles)]
+
+
+class DataPlane:
+    """Per-level candidate batch + per-tile support counting.
+
+    Usage: ``prepare(C)`` once per Apriori level, then ``tile_counts(tile)``
+    for every transaction tile (this is the MapReduceJob's map_fn).
+    """
+
+    def __init__(self, kind: str = "auto", m_bucket: int = 128,
+                 interpret: Optional[bool] = None):
+        if m_bucket <= 0 or m_bucket % 128:
+            raise ValueError(
+                "m_bucket must be a positive multiple of 128 (kernel lanes)")
+        self.backend = resolve_backend(kind)
+        self.m_bucket = m_bucket
+        self.interpret = interpret
+        self._C: Optional[jnp.ndarray] = None
+        self._m_true = 0
+
+    @property
+    def m_padded(self) -> int:
+        return int(self._C.shape[0]) if self._C is not None else 0
+
+    # ------------------------------------------------------------------
+    def prepare(self, C: np.ndarray) -> None:
+        """Stage a level's candidate bitmap (padded to the bucket shape)."""
+        self._m_true = C.shape[0]
+        self._C = jnp.asarray(pad_candidates(C, self.m_bucket))
+
+    def tile_counts(self, tile: np.ndarray) -> np.ndarray:
+        """Support counts [m_true] int64 for one transaction tile."""
+        assert self._C is not None, "prepare() before tile_counts()"
+        Tj = jnp.asarray(tile)
+        if self.backend == "pallas":
+            out = _pallas_count(Tj, self._C, interpret=self.interpret)
+        else:
+            out = _jitted_ref(Tj, self._C)
+        return np.asarray(out[:self._m_true], dtype=np.int64)

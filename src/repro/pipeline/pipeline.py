@@ -1,0 +1,279 @@
+"""MarketBasketPipeline — the paper end-to-end, as one object.
+
+Composition (paper §V):
+
+  baskets ──pack──▶ bitmap T[n_tx, n_items]
+     │
+     ├─ round k=1: item-frequency MapReduceJob (tiled over the profile)
+     ├─ round k≥2: serial candidate generation  → MBScheduler.assign_serial
+     │             (one core runs, the rest are power-gated)
+     │             tiled support counting       → MBScheduler.assign_parallel
+     │             (DataPlane: Pallas kernel on TPU, jitted ref elsewhere)
+     ├─ rules: confidence/lift pruning, serial phase on the fastest core
+     ▼
+  PipelineResult(supports, rules, PipelineReport)
+
+The control plane (candidate generation, rule enumeration) is host Python
+— the paper's "single-threaded tasks"; its scheduling/energy is *modeled*
+through the same MBScheduler/PowerModel the map phases use, so a run's
+report answers the paper's questions: where did the time go, what did
+gating save, what did core switching cost.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.itemsets import (AprioriResult, frequent_itemsets,
+                                 generate_candidates, itemsets_to_bitmap)
+from repro.core.mapreduce import (ExecReport, FailureEvent, MapReduceJob,
+                                  SimulatedCluster)
+from repro.core.power import PowerModel
+from repro.core.rules import Rule, generate_rules
+from repro.core.scheduler import MBScheduler, TaskSpec
+from repro.data.baskets import pack_transactions, pad_items
+from repro.pipeline.dataplane import DataPlane, uniform_tiles
+from repro.pipeline.report import (PipelineReport, RoundReport, SerialPhase,
+                                   busy_list)
+
+Baskets = Union[np.ndarray, Sequence[Sequence[int]]]
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    """Knobs for one mining run.  min_support <= 1 is a fraction of n_tx
+    (1.0 = present in every transaction); values above 1 are absolute
+    transaction counts."""
+
+    min_support: float = 0.02
+    min_confidence: float = 0.6
+    min_lift: float = 0.0
+    max_k: int = 0                  # 0 = mine until no candidates survive
+    n_tiles: int = 32
+    policy: str = "lpt"             # equal | proportional | lpt
+    data_plane: str = "auto"        # auto | pallas | ref
+    m_bucket: int = 128             # candidate-batch rounding (kernel lanes)
+    interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
+    power: str = "cpu"              # cpu | tpu_v5e | none
+    speculate: bool = True
+    # Serial-phase cost model: work units charged per (itemset, level) pair
+    # examined by the join/prune (same units as tile bytes, so serial and
+    # map phases share one time axis).  Calibrated so candidate generation
+    # is small-but-visible next to counting, as in the paper.
+    serial_unit_cost: float = 64.0
+
+    def abs_support(self, n_tx: int) -> int:
+        if self.min_support <= 1.0:
+            return max(1, int(self.min_support * n_tx))
+        return int(self.min_support)
+
+
+@dataclass
+class PipelineResult:
+    supports: Dict[Tuple[int, ...], int]
+    rules: List[Rule]
+    report: PipelineReport
+    n_tx: int
+
+    def frequent(self, k: Optional[int] = None) -> List[Tuple[int, ...]]:
+        return frequent_itemsets(self.supports, k)
+
+
+class MarketBasketPipeline:
+    """Orchestrates the full mining run over a heterogeneity profile."""
+
+    def __init__(self, profile: Optional[HeterogeneityProfile] = None,
+                 config: Optional[PipelineConfig] = None,
+                 scheduler: Optional[MBScheduler] = None,
+                 power: Optional[PowerModel] = None):
+        self.profile = profile or HeterogeneityProfile.paper()
+        self.config = config or PipelineConfig()
+        self.scheduler = scheduler or MBScheduler(self.profile,
+                                                  policy=self.config.policy)
+        if power is not None:
+            self.power = power
+        elif self.config.power == "cpu":
+            self.power = PowerModel.cpu(self.profile)
+        elif self.config.power == "tpu_v5e":
+            self.power = PowerModel.tpu_v5e(self.profile.n)
+        elif self.config.power == "none":
+            self.power = None
+        else:
+            raise ValueError(f"unknown power model {self.config.power!r}")
+        self.cluster = SimulatedCluster(self.profile, self.scheduler,
+                                        power=None)  # energy computed here
+        self.data_plane = DataPlane(self.config.data_plane,
+                                    m_bucket=self.config.m_bucket,
+                                    interpret=self.config.interpret)
+
+    # ------------------------------------------------------------------
+    # phases
+    # ------------------------------------------------------------------
+    def _ingest(self, baskets: Baskets) -> Tuple[np.ndarray, int]:
+        """Returns (lane-padded bitmap, true item count before padding)."""
+        if isinstance(baskets, np.ndarray):
+            if baskets.ndim != 2:
+                raise ValueError(f"bitmap must be 2-D, got {baskets.shape}")
+            # validate BEFORE the uint8 cast: casting would truncate floats
+            # (0.9 -> 0) and wrap negatives, hiding bad input behind an
+            # empty-but-plausible mining result
+            if baskets.size and not ((baskets == 0) | (baskets == 1)).all():
+                raise ValueError("bitmap must contain only 0/1 — pass "
+                                 "transaction lists for count-style data")
+            T = baskets.astype(np.uint8, copy=False)
+        else:
+            T = pack_transactions(baskets)
+        return pad_items(T), T.shape[1]
+
+    def _serial_phase(self, name: str, cost: float,
+                      host_time_s: float) -> SerialPhase:
+        """Model a single-threaded phase: best core runs, the rest gate off."""
+        asg = self.scheduler.assign_serial(TaskSpec(name, cost, parallel=False))
+        dev = asg.serial_device
+        sim_t = float(asg.est_finish[dev])
+        energy = 0.0
+        if self.power is not None:
+            busy = np.zeros(self.profile.n)
+            busy[dev] = sim_t
+            energy = self.power.energy(busy, sim_t, gated=asg.gated)
+        return SerialPhase(name=name, device=dev, cost=cost, sim_time_s=sim_t,
+                           host_time_s=host_time_s, energy_j=energy,
+                           gated=list(asg.gated))
+
+    def _map_round(self, job: MapReduceJob, tiles: List[np.ndarray],
+                   failures: Optional[List[FailureEvent]]
+                   ) -> Tuple[np.ndarray, ExecReport, float, int]:
+        result, rep = self.cluster.run(job, tiles, failures=failures,
+                                       speculate=self.config.speculate)
+        switches = rep.switches            # per-run: this round's moves only
+        energy = 0.0
+        if self.power is not None:
+            # gate by what actually ran, not the planned assignment: after a
+            # failure re-plan a planned-empty core may have executed orphans
+            # (must be billed active) and a dead core ran nothing (gated)
+            gated = [d for d in range(self.profile.n)
+                     if rep.busy_s[d] == 0.0]
+            energy = self.power.energy(rep.busy_s, rep.makespan, gated=gated,
+                                       switches=switches)
+            # a core that died mid-round worked (active) then powered off:
+            # convert its post-death idle tail to gated watts
+            for d in rep.failed_devices:
+                if rep.busy_s[d] > 0.0:
+                    tail = max(rep.makespan - rep.busy_s[d], 0.0)
+                    energy += (self.power.p_gated[d]
+                               - self.power.p_idle[d]) * tail
+        return result, rep, energy, switches
+
+    # ------------------------------------------------------------------
+    def run(self, baskets: Baskets,
+            failures: Optional[List[FailureEvent]] = None) -> PipelineResult:
+        cfg = self.config
+        t_start = time.perf_counter()
+
+        T, n_items_raw = self._ingest(baskets)
+        n_tx_raw = (baskets.shape[0] if isinstance(baskets, np.ndarray)
+                    else len(baskets))
+        n_tx, n_items = T.shape                     # lane-padded (internal)
+        min_sup = cfg.abs_support(n_tx_raw)
+        # device-resident once: every round's map phase reuses these tiles,
+        # so uploading per round would redo the same host->device transfers
+        tiles = [jnp.asarray(t) for t in uniform_tiles(T, cfg.n_tiles)]
+
+        report = PipelineReport(
+            backend=self.data_plane.backend, policy=self.scheduler.policy,
+            profile_speeds=[float(s) for s in self.profile.speeds],
+            n_tx=n_tx_raw, n_items=n_items_raw,
+            n_tiles=len(tiles), min_support=min_sup)
+        supports: Dict[Tuple[int, ...], int] = {}
+
+        # ---- round k=1: item frequency (<item, count>) ----------------
+        job1 = MapReduceJob(
+            name="mba-round1-item-counts",
+            # sum on device, transfer n_items ints — not the whole tile back
+            map_fn=lambda tile: np.asarray(
+                tile.sum(axis=0, dtype=jnp.int32), dtype=np.int64),
+            combine_fn=lambda a, b: a + b,
+            zero_fn=lambda: np.zeros(n_items, dtype=np.int64),
+        )
+        counts, rep, energy, switches = self._map_round(job1, tiles, failures)
+        frequent = [(int(i),) for i in np.nonzero(counts >= min_sup)[0]]
+        for (i,) in frequent:
+            supports[(i,)] = int(counts[i])
+        report.rounds.append(RoundReport(
+            k=1, n_candidates=n_items_raw, n_frequent=len(frequent),
+            n_tiles=len(tiles),
+            tiles_per_device=_tile_histogram(rep),
+            map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
+            switches=switches, reissued=rep.reissued, energy_j=energy,
+            failed_devices=list(rep.failed_devices)))
+
+        # ---- rounds k>=2: serial candidate-gen + tiled counting -------
+        k = 2
+        while frequent and (cfg.max_k == 0 or k <= cfg.max_k):
+            t0 = time.perf_counter()
+            cands = generate_candidates(frequent)
+            host_t = time.perf_counter() - t0
+            serial = self._serial_phase(
+                f"mba-candgen-k{k}",
+                cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
+                host_time_s=host_t)
+            if not cands:
+                report.rounds.append(RoundReport(
+                    k=k, n_candidates=0, n_frequent=0, n_tiles=0,
+                    tiles_per_device=[0] * self.profile.n,
+                    map_makespan_s=0.0, map_busy_s=[0.0] * self.profile.n,
+                    switches=0, reissued=0, energy_j=0.0, serial=serial))
+                break
+
+            self.data_plane.prepare(itemsets_to_bitmap(cands, n_items))
+            job = MapReduceJob(
+                name=f"mba-round{k}-support",
+                map_fn=self.data_plane.tile_counts,
+                combine_fn=lambda a, b: a + b,
+                zero_fn=lambda m=len(cands): np.zeros(m, dtype=np.int64),
+            )
+            sup, rep, energy, switches = self._map_round(job, tiles, failures)
+            frequent = []
+            for c, s in zip(cands, sup):
+                if s >= min_sup:
+                    supports[c] = int(s)
+                    frequent.append(c)
+            report.rounds.append(RoundReport(
+                k=k, n_candidates=len(cands), n_frequent=len(frequent),
+                n_tiles=len(tiles),
+                tiles_per_device=_tile_histogram(rep),
+                map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
+                switches=switches, reissued=rep.reissued, energy_j=energy,
+                serial=serial, m_padded=self.data_plane.m_padded,
+                failed_devices=list(rep.failed_devices)))
+            k += 1
+
+        # ---- step 3: association rules (serial control plane) ---------
+        t0 = time.perf_counter()
+        rules = generate_rules(
+            AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
+            cfg.min_confidence, min_lift=cfg.min_lift)
+        host_t = time.perf_counter() - t0
+        report.rules_phase = self._serial_phase(
+            "mba-rules",
+            cost=max(1.0, len(supports) * cfg.serial_unit_cost),
+            host_time_s=host_t)
+
+        report.n_itemsets = len(supports)
+        report.n_rules = len(rules)
+        report.wall_time_s = time.perf_counter() - t_start
+        return PipelineResult(supports=supports, rules=rules, report=report,
+                              n_tx=n_tx_raw)
+
+
+def _tile_histogram(rep: ExecReport) -> List[int]:
+    """Tiles *executed* per device (orphans counted at the survivor that
+    re-ran them after a failure).  Σ == n_tiles always."""
+    assert rep.tiles_done is not None, "SimulatedCluster always sets this"
+    return list(rep.tiles_done)

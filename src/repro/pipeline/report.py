@@ -1,0 +1,156 @@
+"""Structured accounting for one end-to-end pipeline run.
+
+Every pipeline phase produces a record here; nothing is printed as a side
+effect.  The report is the object benchmarks, tests and future scaling PRs
+consume — per-round makespan/energy, core switches, speculative re-issues,
+and the data-plane batch shapes (which reveal jit-cache reuse across
+levels: rounds sharing one ``m_padded`` share one compiled kernel).
+
+Time/energy semantics: ``serial`` phases run on one core chosen by
+``MBScheduler.assign_serial`` with every other core power-gated; ``map``
+phases are tiled across the heterogeneity profile, and their energy charges
+active watts for busy seconds, idle watts for the tail each core waits on
+the makespan, gated watts for cores the scheduler left empty, plus the
+per-switch joule cost of dynamic core switching.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class SerialPhase:
+    """A single-threaded phase routed to one core (paper §V function 3)."""
+
+    name: str
+    device: int                 # core the scheduler picked
+    cost: float                 # work units (scheduler's estimate)
+    sim_time_s: float           # cost / speed[device]
+    host_time_s: float          # measured wall time on this host
+    energy_j: float             # chosen core active, all others gated
+    gated: List[int] = field(default_factory=list)
+
+
+@dataclass
+class RoundReport:
+    """One Apriori level: serial candidate generation + tiled support count."""
+
+    k: int
+    n_candidates: int
+    n_frequent: int
+    n_tiles: int
+    tiles_per_device: List[int]   # Σ == n_tiles (invariant, tested)
+    map_makespan_s: float
+    map_busy_s: List[float]
+    switches: int
+    reissued: int
+    energy_j: float
+    serial: Optional[SerialPhase] = None    # None for k=1 (no candidate gen)
+    m_padded: int = 0             # data-plane candidate batch (0 = host path)
+    failed_devices: List[int] = field(default_factory=list)
+
+    @property
+    def time_s(self) -> float:
+        return self.map_makespan_s + (self.serial.sim_time_s if self.serial else 0.0)
+
+
+@dataclass
+class PipelineReport:
+    """The full run: config echo, per-round records, and totals."""
+
+    backend: str                  # "pallas" | "ref"
+    policy: str
+    profile_speeds: List[float]
+    n_tx: int
+    n_items: int
+    n_tiles: int
+    min_support: int              # absolute, after fraction resolution
+    rounds: List[RoundReport] = field(default_factory=list)
+    rules_phase: Optional[SerialPhase] = None
+    n_itemsets: int = 0
+    n_rules: int = 0
+    wall_time_s: float = 0.0      # host wall clock for the whole run
+
+    # ------------------------------------------------------------------
+    @property
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def map_time_s(self) -> float:
+        """Sum of map-phase makespans only — the policy-sensitive part (the
+        serial phases are schedule-invariant), comparable to the paper's
+        analytic speedup bound."""
+        return sum(r.map_makespan_s for r in self.rounds)
+
+    @property
+    def total_time_s(self) -> float:
+        t = sum(r.time_s for r in self.rounds)
+        if self.rules_phase:
+            t += self.rules_phase.sim_time_s
+        return t
+
+    @property
+    def total_energy_j(self) -> float:
+        e = sum(r.energy_j + (r.serial.energy_j if r.serial else 0.0)
+                for r in self.rounds)
+        if self.rules_phase:
+            e += self.rules_phase.energy_j
+        return e
+
+    @property
+    def total_switches(self) -> int:
+        return sum(r.switches for r in self.rounds)
+
+    @property
+    def total_reissued(self) -> int:
+        return sum(r.reissued for r in self.rounds)
+
+    @property
+    def kernel_batches(self) -> List[int]:
+        """Distinct data-plane candidate batch shapes (jit cache entries)."""
+        return sorted({r.m_padded for r in self.rounds if r.m_padded})
+
+    # ------------------------------------------------------------------
+    def summary(self) -> str:
+        lines = [
+            f"MarketBasketPipeline: backend={self.backend} policy={self.policy} "
+            f"cores={self.profile_speeds}",
+            f"  data: {self.n_tx} tx x {self.n_items} items, "
+            f"{self.n_tiles} tiles, min_support={self.min_support}",
+            f"  {'round':>7s} {'cands':>6s} {'freq':>6s} {'serial_s':>9s} "
+            f"{'map_s':>9s} {'energy_J':>9s} {'sw':>3s} {'re':>3s} "
+            f"{'tiles/core':>14s} {'Mpad':>5s}",
+        ]
+        for r in self.rounds:
+            ser = r.serial.sim_time_s if r.serial else 0.0
+            e = r.energy_j + (r.serial.energy_j if r.serial else 0.0)
+            lines.append(
+                f"  {('k=' + str(r.k)):>7s} {r.n_candidates:6d} {r.n_frequent:6d} "
+                f"{ser:9.4f} {r.map_makespan_s:9.4f} {e:9.1f} "
+                f"{r.switches:3d} {r.reissued:3d} "
+                f"{'/'.join(map(str, r.tiles_per_device)):>14s} {r.m_padded:5d}")
+        if self.rules_phase:
+            lines.append(f"  rules: {self.n_rules} rules on core "
+                         f"{self.rules_phase.device} "
+                         f"({self.rules_phase.sim_time_s:.4f}s, "
+                         f"{self.rules_phase.energy_j:.1f}J, others gated)")
+        lines.append(
+            f"  totals: {self.n_rounds} rounds, {self.n_itemsets} frequent "
+            f"itemsets, {self.n_rules} rules | simulated "
+            f"{self.total_time_s:.4f}s, {self.total_energy_j:.1f}J, "
+            f"{self.total_switches} core switches, "
+            f"{self.total_reissued} speculative re-issues | "
+            f"wall {self.wall_time_s:.2f}s, kernel batches {self.kernel_batches}")
+        return "\n".join(lines)
+
+    def tiles_invariant_ok(self) -> bool:
+        """Every map round's per-device tile counts must sum to the job size."""
+        return all(sum(r.tiles_per_device) == r.n_tiles for r in self.rounds)
+
+
+def busy_list(busy: np.ndarray) -> List[float]:
+    return [float(b) for b in np.asarray(busy, dtype=np.float64)]

@@ -53,6 +53,30 @@ def test_restore_specific_step(tmp_path):
                                   np.asarray(orig[0], np.float32))
 
 
+@pytest.mark.skipif(not store.HAVE_ZSTD, reason="zstandard not installed")
+def test_zstd_codec_roundtrip(tmp_path):
+    cfg, state = small_state()
+    store.save(str(tmp_path), 1, state, codec="zstd")
+    restored, _ = store.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_raw_codec_roundtrip(tmp_path):
+    """The fallback codec must work regardless of zstandard availability."""
+    cfg, state = small_state()
+    store.save(str(tmp_path), 2, state, codec="raw")
+    assert os.path.exists(os.path.join(str(tmp_path), "step_000000002",
+                                       "arrays.msgpack"))
+    restored, _ = store.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
 def test_shape_mismatch_raises(tmp_path):
     cfg, (params, opt) = small_state()
     store.save(str(tmp_path), 1, params)
@@ -63,11 +87,18 @@ def test_shape_mismatch_raises(tmp_path):
         store.restore(str(tmp_path), wrong)
 
 
+def _abstract_mesh(shape, names):
+    # jax >= 0.5 takes (shape, names); 0.4.x takes ((name, size), ...) pairs
+    try:
+        return jax.sharding.AbstractMesh(shape, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, shape)))
+
+
 def test_resize_plan_gates_chips_and_replans():
-    import jax as _jax
     # AbstractMesh: plan_resize only needs shapes/axis names (no devices)
-    old = _jax.sharding.AbstractMesh((2, 4), ("data", "model"))
-    new = _jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+    old = _abstract_mesh((2, 4), ("data", "model"))
+    new = _abstract_mesh((2, 2, 2), ("pod", "data", "model"))
     plan = plan_resize(old, new, global_batch=16, microbatch=2,
                        profile=HeterogeneityProfile.paper())
     assert plan.batch_plan.step_batches == 8

@@ -2,6 +2,7 @@
 algorithm's structural invariants (hypothesis property tests)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; module skips cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.itemsets import (apriori, apriori_bruteforce,

@@ -3,6 +3,7 @@ associative/chunked selective scan) match their sequential definitions on
 hypothesis-generated shapes/values — the §Perf A correctness backstop."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; module skips cleanly without it
 from hypothesis import given, settings, strategies as st
 
 import jax

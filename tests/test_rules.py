@@ -1,6 +1,7 @@
 """Association-rule generation (paper step 3) vs direct probability math."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; module skips cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.itemsets import apriori

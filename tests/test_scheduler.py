@@ -2,6 +2,7 @@
 quality bounds, proportionality, rebalancing conservation, speculation."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; module skips cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hetero import PAPER_CORES, HeterogeneityProfile

@@ -11,24 +11,22 @@ from repro.distributed.fault import FaultEvent, FaultPlan
 
 def test_end_to_end_mining_matches_oracle():
     from repro.launch.mine import mine
-    result, rules = mine(n_tx=600, n_items=48, min_support=0.05,
-                         min_confidence=0.5, profile_name="paper",
-                         policy="lpt", n_tiles=8, top=0)
+    result = mine(n_tx=600, n_items=48, min_support=0.05,
+                  min_confidence=0.5, profile_name="paper",
+                  policy="lpt", n_tiles=8, top=0)
     T = pad_items(generate_baskets(BasketConfig(n_tx=600, n_items=48, seed=0)))
     want = apriori_bruteforce(T, max(1, int(0.05 * 600)), max_k=8)
     assert result.supports == want
-    assert all(r.confidence >= 0.5 for r in rules)
+    assert all(r.confidence >= 0.5 for r in result.rules)
 
 
 def test_mining_lpt_beats_equal_split_makespan():
     from repro.launch.mine import mine
-    r_lpt, _ = mine(n_tx=512, n_items=32, min_support=0.05,
-                    min_confidence=0.6, policy="lpt", n_tiles=16, top=0)
-    r_eq, _ = mine(n_tx=512, n_items=32, min_support=0.05,
-                   min_confidence=0.6, policy="equal", n_tiles=16, top=0)
-    m_lpt = sum(rep.makespan for _, rep in r_lpt.reports)
-    m_eq = sum(rep.makespan for _, rep in r_eq.reports)
-    assert m_lpt < m_eq
+    r_lpt = mine(n_tx=512, n_items=32, min_support=0.05,
+                 min_confidence=0.6, policy="lpt", n_tiles=16, top=0)
+    r_eq = mine(n_tx=512, n_items=32, min_support=0.05,
+                min_confidence=0.6, policy="equal", n_tiles=16, top=0)
+    assert r_lpt.report.total_time_s < r_eq.report.total_time_s
     assert r_lpt.supports == r_eq.supports     # schedule never changes results
 
 
