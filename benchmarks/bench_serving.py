@@ -1,0 +1,81 @@
+"""B7 — the online serving plane: QPS vs batch size, cache on/off, and the
+Pallas vs jitted-ref data plane, all on the paper's heterogeneous four-core
+profile.
+
+Emits ``name,us_per_call,derived`` CSV rows where us_per_call is host wall
+microseconds per query and derived is the simulated QPS (the
+policy-sensitive number; off-TPU the Pallas rows run in interpret mode, so
+only the TPU run is a kernel speed claim — both rows verify the plumbing).
+"""
+import time
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.baskets import BasketConfig, generate_baskets
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+from repro.serving import RecommendationEngine, RuleIndex, ServingConfig
+
+
+def _mine_index(n_items=64):
+    T = generate_baskets(BasketConfig(n_tx=2048, n_items=n_items, seed=1))
+    res = MarketBasketPipeline(
+        HeterogeneityProfile.paper(),
+        PipelineConfig(min_support=0.03, n_tiles=8)).run(T)
+    return RuleIndex.build(res.rules, n_items)
+
+
+def _trace(n_items=64, n_unique=128, repeats=4):
+    """n_unique distinct baskets repeated `repeats` times: the repeated
+    tail is what the result cache can win on."""
+    Q = generate_baskets(BasketConfig(n_tx=n_unique, n_items=n_items, seed=7))
+    return [row for row in Q] * repeats
+
+
+def run(csv_rows):
+    profile = HeterogeneityProfile.paper()
+    index = _mine_index()
+    queries = _trace()
+
+    # QPS vs batch bucket, cache on/off (single-bucket engines so every
+    # batch pads to exactly that size)
+    for bucket in (1, 8, 64):
+        for cache_size in (0, 4096):
+            tag = "on" if cache_size else "off"
+            engine = RecommendationEngine(
+                index, profile,
+                ServingConfig(k=5, batch_buckets=(bucket,),
+                              data_plane="ref", cache_size=cache_size))
+            engine.serve(queries[:8])            # warm the jit caches
+            engine.cache.clear()
+            t0 = time.perf_counter()
+            _, rep = engine.serve(queries)
+            wall_us = (time.perf_counter() - t0) * 1e6
+            csv_rows.append((f"serving_b{bucket}_cache_{tag}",
+                             wall_us / rep.n_queries, rep.qps))
+
+    # Pallas kernel vs jitted ref (interpret mode off-TPU: plumbing check)
+    small = queries[:64]
+    for plane in ("ref", "pallas"):
+        engine = RecommendationEngine(
+            index, profile,
+            ServingConfig(k=5, batch_buckets=(8,), data_plane=plane,
+                          cache_size=0))
+        engine.serve(small[:8])                  # warm the jit caches
+        t0 = time.perf_counter()
+        _, rep = engine.serve(small)
+        wall_us = (time.perf_counter() - t0) * 1e6
+        csv_rows.append((f"serving_plane_{plane}_wall",
+                         wall_us / rep.n_queries, rep.qps))
+
+    # cache economics at the default bucket mix: hit rate as derived
+    engine = RecommendationEngine(index, profile,
+                                  ServingConfig(k=5, cache_size=4096,
+                                                data_plane="ref"))
+    engine.serve(queries[:8])                    # warm the jit caches
+    engine.cache.clear()
+    t0 = time.perf_counter()
+    _, rep = engine.serve(queries)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    csv_rows.append(("serving_cache_hit_rate", wall_us / rep.n_queries,
+                     rep.hit_rate))

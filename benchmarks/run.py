@@ -7,6 +7,7 @@
   B4 bench_kernels    — Pallas hot-spots vs jnp oracle + TPU roofline
   B5 bench_roofline   — dry-run roofline table reader
   B6 bench_pipeline   — end-to-end MarketBasketPipeline (policies, scaling)
+  B7 bench_serving    — online serving plane (QPS vs batch, cache, planes)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 """
@@ -14,7 +15,8 @@ import argparse
 import sys
 
 from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
-                        bench_power, bench_roofline, bench_scheduler)
+                        bench_power, bench_roofline, bench_scheduler,
+                        bench_serving)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -23,6 +25,7 @@ SUITES = {
     "B4": ("kernels", bench_kernels.run),
     "B5": ("roofline", bench_roofline.run),
     "B6": ("pipeline", bench_pipeline.run),
+    "B7": ("serving", bench_serving.run),
 }
 
 
@@ -31,8 +34,13 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma list of suite ids")
     args, _ = ap.parse_known_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
+    unknown = only - set(SUITES)
+    if unknown:
+        ap.error(f"unknown suite ids {sorted(unknown)} "
+                 f"(known: {', '.join(sorted(SUITES))})")
 
     rows = []
+    failed = []
     for sid, (name, fn) in SUITES.items():
         if sid not in only:
             continue
@@ -40,10 +48,13 @@ def main() -> None:
             fn(rows)
         except Exception as e:  # noqa: BLE001 — report, keep the harness alive
             rows.append((f"{name}_FAILED", 0.0, 0.0))
+            failed.append(sid)
             print(f"# {sid} {name} failed: {e}", file=sys.stderr)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived:.4f}")
+    if failed:   # every suite still reports, but CI must see the failure
+        sys.exit(f"benchmark suites failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

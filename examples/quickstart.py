@@ -45,3 +45,11 @@ print(f"\nMB Scheduler (lpt) vs naive equal split: {speedup:.2f}x faster, "
 print(f"\ntop rules (of {len(best.rules)}):")
 for r in best.rules[:8]:
     print("  ", r)
+
+# 5. online serving: compile the rules into a device-resident index and
+#    answer "given this basket, which items next?" in scheduled batches
+from repro.serving import RecommendationEngine, RuleIndex
+
+engine = RecommendationEngine(RuleIndex.build(best.rules, T.shape[1]), profile)
+recs, serving = engine.serve(list(T[:64]))
+print("\n" + serving.summary())

@@ -52,5 +52,10 @@ def generate_rules(result: AprioriResult, min_confidence: float,
                 if lift >= min_lift:
                     rules.append(Rule(tuple(sorted(ante)), cons,
                                       supp / n, conf, lift))
-    rules.sort(key=lambda r: (-r.confidence, -r.support))
+    # total order: (confidence, support) ties are common (many perfect-
+    # confidence rules), and supports-dict insertion order would otherwise
+    # leak into the result — the serving index build relies on this being
+    # reproducible across processes
+    rules.sort(key=lambda r: (-r.confidence, -r.support, -r.lift,
+                              r.antecedent, r.consequent))
     return rules

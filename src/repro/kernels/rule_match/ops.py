@@ -1,0 +1,91 @@
+"""Jit'd public wrapper for the rule-match kernel family: batched top-k
+recommendation (handles padding and backend selection: Pallas-TPU on TPU,
+jitted pure-jnp ref elsewhere — the same dispatch idiom as the mining
+data plane in ``repro.pipeline.dataplane``)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rule_match.kernel import rule_scores_pallas
+from repro.kernels.rule_match.ref import (recommend_ref, rule_scores_ref,
+                                          topk_from_scores)
+
+
+def _pad_axis_to(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "backend", "interpret",
+                                    "bb", "br", "bi"))
+def _rule_topk(Q, A, sizes, conf, cons, n_items, *, k, backend, interpret,
+               bb, br, bi):
+    if backend == "pallas":
+        scores = rule_scores_pallas(Q, A, sizes[None, :], conf[None, :],
+                                    bb=bb, br=br, bi=bi, interpret=interpret)
+    else:
+        scores = rule_scores_ref(Q, A, sizes, conf)
+    return topk_from_scores(scores, Q, cons, n_items, k)
+
+
+def rule_topk(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
+              conf: jnp.ndarray, cons: jnp.ndarray, *, k: int, n_items: int,
+              backend: str | None = None,
+              interpret: bool | None = None):
+    """Top-k item recommendations for a batch of query baskets.
+
+    Q: [B, I] 0/1 baskets; A: [R, I] 0/1 antecedent masks; sizes: [R]
+    (=|A_r|); conf: [R] rule confidences; cons: [R] consequent item ids.
+    Pads B→8·, R→128·, I→128· as the kernel requires — padded rule rows
+    get ``sizes=-1`` (never match; an all-zero row would match everything),
+    ``conf=0`` and ``cons=I_padded`` (a dummy max-segment sliced away).
+    Returns (items [B, k] int32, scores [B, k] f32) ordered by
+    (score desc, item id asc); entries with score <= 0 are non-matches the
+    caller should drop.
+    """
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B0, I0 = Q.shape
+    R0 = A.shape[0]
+    if not 0 < k <= I0:
+        raise ValueError(f"k={k} must be in [1, n_query_items={I0}]")
+    if n_items > I0 or A.shape[1] != I0:
+        raise ValueError(f"item-axis mismatch: Q {Q.shape}, A {A.shape}, "
+                         f"n_items={n_items}")
+    Ip = I0 + (-I0) % 128
+    Q = _pad_axis_to(jnp.asarray(Q, jnp.int8), 1, Ip)
+    Q = _pad_axis_to(Q, 0, B0 + (-B0) % 8)
+    A = _pad_axis_to(jnp.asarray(A, jnp.int8), 1, Ip)
+    Rp = R0 + (-R0) % 128
+    A = _pad_axis_to(A, 0, Rp)
+    pad_r = Rp - R0
+    sizes = jnp.pad(jnp.asarray(sizes, jnp.float32), (0, pad_r),
+                    constant_values=-1.0)
+    conf = jnp.pad(jnp.asarray(conf, jnp.float32), (0, pad_r))
+    cons = jnp.pad(jnp.asarray(cons, jnp.int32), (0, pad_r),
+                   constant_values=Ip)
+    # grid-divisibility: shrink blocks to gcd-friendly sizes
+    bb, br, bi = min(256, Q.shape[0]), min(256, Rp), min(512, Ip)
+    while Q.shape[0] % bb:
+        bb //= 2
+    while Rp % br:
+        br //= 2
+    while Ip % bi:
+        bi //= 2
+    items, scores = _rule_topk(Q, A, sizes, conf, cons, n_items, k=k,
+                               backend=backend, interpret=interpret,
+                               bb=bb, br=br, bi=bi)
+    return items[:B0], scores[:B0]
+
+
+rule_topk_oracle = recommend_ref

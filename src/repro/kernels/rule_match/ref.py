@@ -1,0 +1,60 @@
+"""Pure-jnp oracle for the rule-match kernel family.
+
+Serving semantics (shared by this oracle, the Pallas kernel + ops wrapper,
+the serving engine, and the brute-force test oracle in
+``repro.serving.oracle``):
+
+  score[q, r] = confidence[r]  if antecedent_r ⊆ basket_q  else 0
+  item[q, j]  = max over rows r with consequent[r] == j of score[q, r]
+                (0 when no matching rule names j)
+  items already in basket_q — and lane-padding item ids — score -1,
+  so they can never enter the top-k
+  top-k per query ordered by (score desc, item id asc) — lax.top_k's
+  lower-index-first tie rule
+
+Index padding contract: padded rule rows carry ``sizes = -1`` (an all-zero
+antecedent row would otherwise subset-match every basket), ``conf = 0`` and
+``cons = n_items_padded`` (a dummy segment sliced away before the top-k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rule_scores_ref(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
+                    conf: jnp.ndarray) -> jnp.ndarray:
+    """Q: [B, I] 0/1 baskets; A: [R, I] 0/1 antecedent masks; sizes: [R] f32
+    (=|A_r|, -1 on padded rows); conf: [R] f32 -> [B, R] f32 scores."""
+    dots = jnp.dot(Q.astype(jnp.int32), A.astype(jnp.int32).T)       # [B, R]
+    match = dots.astype(jnp.float32) == sizes[None, :].astype(jnp.float32)
+    return match.astype(jnp.float32) * conf[None, :].astype(jnp.float32)
+
+
+def topk_from_scores(scores: jnp.ndarray, Q: jnp.ndarray, cons: jnp.ndarray,
+                     n_items, k: int):
+    """Rule scores [B, R] -> per-item max-confidence -> top-k.
+
+    The single definition of the post-matching semantics: both the jnp
+    oracle and the Pallas ops wrapper fold their score matrices through
+    this, so the two backends cannot drift apart.
+    """
+    Ip = Q.shape[1]
+    seg = jax.vmap(
+        lambda s: jax.ops.segment_max(s, cons, num_segments=Ip + 1))(scores)
+    item_scores = jnp.maximum(seg[:, :Ip], 0.0)   # empty segments -> 0
+    valid = (jnp.arange(Ip)[None, :] < n_items) & (Q == 0)
+    masked = jnp.where(valid, item_scores, -1.0)
+    top_scores, top_items = jax.lax.top_k(masked, k)
+    return top_items.astype(jnp.int32), top_scores
+
+
+def recommend_ref(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
+                  conf: jnp.ndarray, cons: jnp.ndarray, n_items, k: int):
+    """Full oracle: rule scores -> per-item max-confidence -> top-k.
+
+    cons: [R] int32 consequent item id per rule row (n_items_padded on
+    padded rows).  Returns (items [B, k] int32, scores [B, k] f32).
+    """
+    scores = rule_scores_ref(Q, A, sizes, conf)                       # [B, R]
+    return topk_from_scores(scores, Q, cons, n_items, k)

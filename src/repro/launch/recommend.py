@@ -1,0 +1,144 @@
+"""Mine → compile → serve: the online recommendation path end to end.
+
+Mines association rules with the MarketBasketPipeline, compiles them into a
+device-resident :class:`RuleIndex`, then replays a synthetic query trace
+through the micro-batching :class:`RecommendationEngine` (admission via
+``MBScheduler.assign_serial``, batched scoring via ``assign_parallel``).
+
+  PYTHONPATH=src python -m repro.launch.recommend --n-tx 8192 --queries 2048
+  PYTHONPATH=src python -m repro.launch.recommend --smoke
+
+``--smoke`` shrinks the problem, serves a 1k-query trace on CPU and pins
+every batched top-k result to the brute-force Python oracle — a non-zero
+exit means the serving data plane and the rule list disagree.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.data.baskets import BasketConfig, generate_baskets
+from repro.launch.mine import PROFILES
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+from repro.serving import (RecommendationEngine, RuleIndex, ServingConfig,
+                           recommend_bruteforce)
+
+
+def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
+                    mean_gap_s: float = 0.0):
+    """Query baskets drawn from the same store distribution as the corpus
+    (fresh seed), with optional exponential inter-arrival gaps."""
+    Q = generate_baskets(BasketConfig(**{**cfg.__dict__, "n_tx": n_queries,
+                                         "seed": seed}))
+    queries = [row for row in Q]
+    rng = np.random.default_rng(seed + 1)
+    arrival = (np.cumsum(rng.exponential(mean_gap_s, n_queries))
+               if mean_gap_s > 0 else None)
+    return queries, arrival
+
+
+def recommend(n_tx: int = 8192, n_items: int = 128,
+              min_support: float = 0.02, min_confidence: float = 0.6,
+              profile_name: str = "paper", policy: str = "lpt",
+              data_plane: str = "auto", n_queries: int = 2048, k: int = 5,
+              batch: int = 64, cache_size: int = 4096, seed: int = 0,
+              mean_gap_s: float = 0.0, index_dir: str = "",
+              smoke: bool = False, top: int = 8):
+    profile = PROFILES[profile_name]()
+    basket_cfg = BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed)
+
+    # 1. mine (the offline path)
+    pipe = MarketBasketPipeline(
+        profile,
+        PipelineConfig(min_support=min_support, min_confidence=min_confidence,
+                       policy=policy, data_plane=data_plane))
+    result = pipe.run(generate_baskets(basket_cfg))
+    print(f"[recommend] mined {len(result.rules)} rules from {n_tx} tx "
+          f"({result.report.n_rounds} rounds, backend="
+          f"{result.report.backend})")
+
+    # 2. compile the rule index (optionally persist it)
+    index = RuleIndex.build(result.rules, n_items)
+    print(f"[recommend] index: {index.n_rows} rows "
+          f"({index.n_rows_padded}x{index.n_items_padded} padded, "
+          f"{index.nbytes / 1024:.0f} KiB)")
+    if index_dir:
+        print(f"[recommend] saved index to {index.save(index_dir)}")
+
+    # 3. replay the synthetic query trace
+    buckets = tuple(sorted({1, min(8, batch), batch}))
+    engine = RecommendationEngine(
+        index, profile,
+        ServingConfig(k=k, batch_buckets=buckets, data_plane=data_plane,
+                      cache_size=cache_size, policy=policy))
+    queries, arrival = synthetic_trace(basket_cfg, n_queries, seed + 101,
+                                       mean_gap_s)
+    results, report = engine.serve(queries, arrival)
+    print(report.summary())
+    shown = 0
+    for q, recs in zip(queries, results):
+        if recs and shown < top:
+            items = ",".join(str(i) for i in np.nonzero(q)[0])
+            print(f"   basket {{{items}}} -> " +
+                  ", ".join(f"{i} ({s:.3f})" for i, s in recs))
+            shown += 1
+
+    # 4. smoke gate: every batched result must equal the brute-force oracle
+    if smoke:
+        bad = 0
+        for q, got in zip(queries, results):
+            want = recommend_bruteforce(result.rules,
+                                        np.nonzero(q)[0].tolist(), k)
+            if got != want:
+                bad += 1
+                if bad <= 3:
+                    print(f"[recommend] MISMATCH basket="
+                          f"{np.nonzero(q)[0].tolist()}\n  got  {got}"
+                          f"\n  want {want}", file=sys.stderr)
+        if bad:
+            print(f"[recommend] SMOKE FAILED: {bad}/{len(queries)} queries "
+                  f"disagree with the brute-force oracle", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"[recommend] smoke OK: {len(queries)} queries match the "
+              f"brute-force oracle exactly")
+    return results, report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-tx", type=int, default=8192)
+    ap.add_argument("--n-items", type=int, default=128)
+    ap.add_argument("--min-support", type=float, default=0.02)
+    ap.add_argument("--min-confidence", type=float, default=0.6)
+    ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
+    ap.add_argument("--policy", default="lpt",
+                    choices=["lpt", "proportional", "equal"])
+    ap.add_argument("--data-plane", default="auto",
+                    choices=["auto", "pallas", "ref"])
+    ap.add_argument("--queries", type=int, default=2048)
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=64,
+                    help="largest admission bucket")
+    ap.add_argument("--cache-size", type=int, default=4096,
+                    help="LRU entries; 0 disables the result cache")
+    ap.add_argument("--mean-gap-s", type=float, default=0.0,
+                    help="mean simulated inter-arrival gap (0 = all at once)")
+    ap.add_argument("--index-dir", default="",
+                    help="persist the compiled index here (checkpoint store)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small corpus, 1k queries, verify vs oracle")
+    args = ap.parse_args()
+    if args.smoke:
+        args.n_tx, args.n_items, args.queries = 2048, 64, 1000
+        args.min_support = max(args.min_support, 0.03)
+    recommend(args.n_tx, args.n_items, args.min_support, args.min_confidence,
+              args.profile, args.policy, args.data_plane, args.queries,
+              args.k, args.batch, args.cache_size, args.seed, args.mean_gap_s,
+              args.index_dir, args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Online rule-serving plane: compiled rule index + batched recommendation
+engine (the query-side twin of ``repro.pipeline``)."""
+from repro.serving.cache import ResultCache, basket_key
+from repro.serving.engine import (RecommendationEngine, ServingConfig,
+                                  ServingReport)
+from repro.serving.index import RuleIndex
+from repro.serving.oracle import recommend_bruteforce
+
+__all__ = [
+    "RecommendationEngine", "ResultCache", "RuleIndex", "ServingConfig",
+    "ServingReport", "basket_key", "recommend_bruteforce",
+]

@@ -1,0 +1,330 @@
+"""Micro-batching recommendation engine — the query side of the paper.
+
+The mining pipeline's framing (serial phases to the best core, parallel
+phases tiled over the heterogeneity profile, power charged for gating and
+core switches) applies unchanged to serving:
+
+  requests ──admission queue──▶ fixed batch buckets (pad-to-bucket)
+     │            └─ serial dispatch phase  → MBScheduler.assign_serial
+     ├─ result cache probe (LRU on the canonical basket bitmap)
+     ├─ batched scoring of the misses       → MBScheduler.assign_parallel
+     │  (rule_match kernel: Pallas on TPU, jitted ref elsewhere)
+     ▼
+  per-request top-k + ServingReport (QPS, p50/p99, batch fill, cache,
+  energy, switches) — the serving twin of PipelineReport
+
+Pad-to-bucket is the same shape discipline as the mining data plane's
+candidate bucketing: every batch is rounded up to a fixed bucket size so
+XLA compiles one kernel per bucket, not one per traffic pattern.  The
+simulated clock advances by (admission serial time + scoring makespan) per
+batch, so queueing delay, batching gain and the scheduler policy all show
+up in the latency percentiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.power import PowerModel
+from repro.core.scheduler import MBScheduler, TaskSpec
+from repro.kernels.rule_match.ops import rule_topk
+from repro.pipeline.dataplane import resolve_backend
+from repro.serving.cache import Recommendation, ResultCache, basket_key
+from repro.serving.index import RuleIndex
+
+Query = Union[np.ndarray, Sequence[int]]
+
+
+@dataclass(frozen=True)
+class ServingConfig:
+    """Knobs for the online engine (mirrors PipelineConfig for mining)."""
+
+    k: int = 5                      # recommendations per query
+    batch_buckets: Tuple[int, ...] = (1, 8, 64)   # admission coalescing sizes
+    data_plane: str = "auto"        # auto | pallas | ref
+    interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
+    cache_size: int = 4096          # LRU entries; 0 disables caching
+    policy: str = "lpt"             # scheduler policy for the scoring phase
+    power: str = "cpu"              # cpu | tpu_v5e | none
+    # Work-unit cost model (same byte-flavored units as the mining phases):
+    # admission charges per batch slot, scoring per slot scaled by index
+    # size (each query is matched against every rule row).
+    admission_unit_cost: float = 8.0
+    score_unit_cost: float = 1.0 / 128.0
+
+
+@dataclass
+class ServingReport:
+    """Accounting for one ``serve()`` call (the serving PipelineReport)."""
+
+    backend: str
+    policy: str
+    k: int
+    n_queries: int = 0
+    n_batches: int = 0
+    bucket_counts: Dict[int, int] = field(default_factory=dict)
+    batch_fill: float = 0.0         # mean true-requests / bucket-size, <= 1
+    cache_hits: int = 0
+    cache_misses: int = 0
+    sim_time_s: float = 0.0         # simulated clock at last completion
+    wall_time_s: float = 0.0
+    p50_latency_s: float = 0.0
+    p99_latency_s: float = 0.0
+    energy_j: float = 0.0
+    switches: int = 0
+    index_rows: int = 0
+    index_version: int = 0
+
+    @property
+    def qps(self) -> float:
+        """Simulated queries/second (work-unit clock, policy-sensitive)."""
+        return self.n_queries / self.sim_time_s if self.sim_time_s > 0 else 0.0
+
+    @property
+    def wall_qps(self) -> float:
+        return (self.n_queries / self.wall_time_s
+                if self.wall_time_s > 0 else 0.0)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def summary(self) -> str:
+        buckets = "/".join(f"{b}:{c}" for b, c in
+                           sorted(self.bucket_counts.items()))
+        return (
+            f"RecommendationEngine: backend={self.backend} "
+            f"policy={self.policy} k={self.k} index_rows={self.index_rows} "
+            f"v{self.index_version}\n"
+            f"  {self.n_queries} queries in {self.n_batches} batches "
+            f"(buckets {buckets}, fill {self.batch_fill:.2f}) | cache "
+            f"{self.cache_hits} hit / {self.cache_misses} miss "
+            f"({self.hit_rate:.0%})\n"
+            f"  simulated {self.sim_time_s:.4f}s = {self.qps:.1f} QPS "
+            f"(p50 {self.p50_latency_s:.4f}s, p99 {self.p99_latency_s:.4f}s) "
+            f"| {self.energy_j:.1f} J, {self.switches} core switches | "
+            f"wall {self.wall_time_s:.3f}s = {self.wall_qps:.0f} QPS")
+
+
+class RecommendationEngine:
+    """Serves "given this basket, which items next?" from a compiled index."""
+
+    def __init__(self, index: RuleIndex,
+                 profile: Optional[HeterogeneityProfile] = None,
+                 config: Optional[ServingConfig] = None,
+                 scheduler: Optional[MBScheduler] = None,
+                 power: Optional[PowerModel] = None):
+        self.config = config or ServingConfig()
+        cfg = self.config
+        if not cfg.batch_buckets or any(b <= 0 for b in cfg.batch_buckets):
+            raise ValueError(f"batch_buckets must be positive: "
+                             f"{cfg.batch_buckets}")
+        self._buckets = tuple(sorted(set(int(b) for b in cfg.batch_buckets)))
+        if not 0 < cfg.k <= index.n_items:
+            raise ValueError(f"k={cfg.k} must be in [1, n_items="
+                             f"{index.n_items}]")
+        self.profile = profile or HeterogeneityProfile.paper()
+        self.scheduler = scheduler or MBScheduler(self.profile,
+                                                  policy=cfg.policy)
+        if power is not None:
+            self.power = power
+        elif cfg.power == "cpu":
+            self.power = PowerModel.cpu(self.profile)
+        elif cfg.power == "tpu_v5e":
+            self.power = PowerModel.tpu_v5e(self.profile.n)
+        elif cfg.power == "none":
+            self.power = None
+        else:
+            raise ValueError(f"unknown power model {cfg.power!r}")
+        self.backend = resolve_backend(cfg.data_plane)
+        self.cache = ResultCache(cfg.cache_size)
+        self.index: RuleIndex = None  # set by refresh()
+        self.refresh(index)
+
+    # ------------------------------------------------------------------
+    def refresh(self, index: RuleIndex) -> RuleIndex:
+        """Atomically swap in a (re)built index and invalidate the cache.
+
+        The version is bumped past the live index's if the new build does
+        not already exceed it, so cache generations are totally ordered.
+        """
+        if self.index is not None and index.version <= self.index.version:
+            index = dataclasses.replace(index,
+                                        version=self.index.version + 1)
+        # device-resident once: every batch reuses these arrays
+        self._dev = {
+            "ante": jnp.asarray(index.ante),
+            "sizes": jnp.asarray(index.sizes),
+            "conf": jnp.asarray(index.conf),
+            "cons": jnp.asarray(index.cons),
+        }
+        self.index = index          # single assignment = the atomic swap
+        self.cache.clear()
+        return index
+
+    # ------------------------------------------------------------------
+    def _as_bits(self, query: Query) -> np.ndarray:
+        """Canonical 0/1 vector over the true item universe.
+
+        Array inputs (numpy/jax rows) of full basket length are bitmaps;
+        Python sequences (list/tuple/set) are always item-id collections —
+        a list of 0/1 values is NOT treated as a bitmap, since a two-item
+        basket [0, 1] would be indistinguishable from one.
+        """
+        n_items = self.index.n_items
+        if not isinstance(query, (list, tuple, set, frozenset, range)):
+            query = np.asarray(query)     # jax/device arrays -> host bitmap
+        if isinstance(query, np.ndarray) and query.ndim == 1 and \
+                query.shape[0] in (n_items, self.index.n_items_padded):
+            if query.size and not ((query == 0) | (query == 1)).all():
+                raise ValueError("bitmap queries must contain only 0/1")
+            if query[n_items:].any():
+                raise ValueError(f"bitmap query sets items beyond the index "
+                                 f"universe [0, {n_items})")
+            return query[:n_items].astype(np.uint8)
+        bits = np.zeros(n_items, dtype=np.uint8)
+        ids = list(query)
+        if ids:
+            idx = np.asarray(ids, dtype=np.int64)
+            if idx.min() < 0 or idx.max() >= n_items:
+                raise ValueError(f"query item ids must be in [0, {n_items})")
+            bits[idx] = 1
+        return bits
+
+    def _score_batch(self, rows: List[np.ndarray],
+                     bucket: int) -> List[Recommendation]:
+        """Run the rule-match data plane on a pad-to-bucket query block."""
+        cfg = self.config
+        Q = np.zeros((bucket, self.index.n_items_padded), dtype=np.uint8)
+        for r, bits in enumerate(rows):
+            Q[r, :self.index.n_items] = bits
+        items, scores = rule_topk(
+            Q, self._dev["ante"], self._dev["sizes"], self._dev["conf"],
+            self._dev["cons"], k=cfg.k, n_items=self.index.n_items,
+            backend=self.backend, interpret=cfg.interpret)
+        items = np.asarray(items)
+        scores = np.asarray(scores)
+        return [[(int(i), float(s)) for i, s in zip(items[r], scores[r])
+                 if s > 0.0] for r in range(len(rows))]
+
+    # ------------------------------------------------------------------
+    def recommend(self, query: Query) -> Recommendation:
+        """Single-query convenience path (cached, batch of one)."""
+        results, _ = self.serve([query])
+        return results[0]
+
+    def serve(self, queries: Sequence[Query],
+              arrival_s: Optional[Sequence[float]] = None
+              ) -> Tuple[List[Recommendation], ServingReport]:
+        """Replay a query trace through the admission queue.
+
+        arrival_s (optional, non-decreasing, simulated seconds) drives the
+        queueing model; default is all-at-once.  Returns per-request top-k
+        recommendations (input order) and the ServingReport.
+        """
+        cfg = self.config
+        t_wall = time.perf_counter()
+        bits = [self._as_bits(q) for q in queries]
+        keys = [basket_key(b) for b in bits]
+        n = len(bits)
+        if arrival_s is None:
+            arrival = np.zeros(n)
+        else:
+            arrival = np.asarray(arrival_s, dtype=np.float64)
+            if arrival.shape != (n,):
+                raise ValueError(f"arrival_s must have one entry per query: "
+                                 f"{arrival.shape} vs {n}")
+            if n and (np.diff(arrival) < 0).any():
+                raise ValueError("arrival_s must be non-decreasing")
+
+        report = ServingReport(backend=self.backend,
+                               policy=self.scheduler.policy, k=cfg.k,
+                               n_queries=n, index_rows=self.index.n_rows,
+                               index_version=self.index.version)
+        results: List[Optional[Recommendation]] = [None] * n
+        latencies = np.zeros(n)
+        hits0, misses0 = self.cache.hits, self.cache.misses
+        fills: List[float] = []
+        max_bucket = self._buckets[-1]
+        per_query_cost = (cfg.score_unit_cost * self.index.n_rows_padded
+                          * self.index.n_items_padded)
+        t = 0.0
+        i = 0
+        while i < n:
+            t = max(t, arrival[i])
+            avail = i
+            while avail < n and arrival[avail] <= t:
+                avail += 1
+            batch_n = min(avail - i, max_bucket)
+            bucket = next(b for b in self._buckets if b >= batch_n)
+
+            miss_idx = []
+            for j in range(i, i + batch_n):
+                cached = self.cache.get(keys[j])
+                if cached is not None:
+                    results[j] = cached
+                else:
+                    miss_idx.append(j)
+
+            # serial admission/dispatch: best core runs, the rest gate off
+            adm = self.scheduler.assign_serial(TaskSpec(
+                f"serve-admit-{report.n_batches}",
+                cost=max(1.0, bucket * cfg.admission_unit_cost),
+                parallel=False))
+            d0 = adm.serial_device
+            t_serial = float(adm.est_finish[d0])
+            if self.power is not None:
+                busy = np.zeros(self.profile.n)
+                busy[d0] = t_serial
+                report.energy_j += self.power.energy(busy, t_serial,
+                                                     gated=adm.gated)
+
+            makespan = 0.0
+            if miss_idx:
+                recs = self._score_batch([bits[j] for j in miss_idx], bucket)
+                for j, rec in zip(miss_idx, recs):
+                    results[j] = rec
+                    self.cache.put(keys[j], rec)
+                # parallel scoring: the padded bucket is what the data plane
+                # runs, so every slot is a schedulable tile
+                asg = self.scheduler.assign_parallel(TaskSpec(
+                    f"serve-score-{report.n_batches}",
+                    cost=bucket * per_query_cost, parallel=True,
+                    n_tiles=bucket))
+                makespan = asg.makespan
+                # each core spun up away from the admission core is a switch
+                sw = sum(1 for d, ts in enumerate(asg.tiles_of)
+                         if ts and d != d0)
+                report.switches += sw
+                if self.power is not None:
+                    report.energy_j += self.power.energy(
+                        asg.est_finish, makespan, gated=asg.gated,
+                        switches=sw)
+
+            t_done = t + t_serial + makespan
+            for j in range(i, i + batch_n):
+                latencies[j] = t_done - arrival[j]
+            fills.append(batch_n / bucket)
+            report.bucket_counts[bucket] = \
+                report.bucket_counts.get(bucket, 0) + 1
+            report.n_batches += 1
+            t = t_done
+            i += batch_n
+
+        report.cache_hits = self.cache.hits - hits0
+        report.cache_misses = self.cache.misses - misses0
+        report.sim_time_s = t
+        report.batch_fill = float(np.mean(fills)) if fills else 0.0
+        if n:
+            report.p50_latency_s = float(np.percentile(latencies, 50))
+            report.p99_latency_s = float(np.percentile(latencies, 99))
+        report.wall_time_s = time.perf_counter() - t_wall
+        return results, report
