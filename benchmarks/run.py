@@ -1,22 +1,37 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
 """Benchmark harness (DESIGN.md §7):
 
-  B1 bench_apriori    — 3-step MapReduce Apriori scaling (paper §V)
-  B2 bench_scheduler  — MB Scheduler vs equal split, 80/120/200/400 + pods
-  B3 bench_power      — gating / switching energy (paper §VI)
-  B4 bench_kernels    — Pallas hot-spots vs jnp oracle + TPU roofline
-  B5 bench_roofline   — dry-run roofline table reader
-  B6 bench_pipeline   — end-to-end MarketBasketPipeline (policies, scaling)
-  B7 bench_serving    — online serving plane (QPS vs batch, cache, planes)
+  B1 bench_apriori         — 3-step MapReduce Apriori scaling (paper §V)
+  B2 bench_scheduler       — MB Scheduler vs equal split, 80/120/200/400 + pods
+  B3 bench_power           — gating / switching energy (paper §VI)
+  B4 bench_kernels         — Pallas hot-spots vs jnp oracle + TPU roofline
+  B5 bench_roofline        — dry-run roofline table reader
+  B6 bench_pipeline        — end-to-end MarketBasketPipeline (policies, scaling)
+  B7 bench_serving         — online serving plane (QPS vs batch, cache, planes)
+  B8 bench_sharded_mining  — distributed mining plane (shard-count scaling;
+                             needs XLA_FLAGS=--xla_force_host_platform_
+                             device_count=8 for the full curve)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
+
+Regression gating: ``--check-baselines`` compares every measured
+``us_per_call`` against ``benchmarks/baselines.json`` and fails when any
+row regresses beyond ``--regression-factor`` (default 2.0×) — the CI perf
+trajectory gate.  Refresh the baselines on the CI runner class with one
+command: ``python -m benchmarks.run --update-baselines`` (optionally with
+``--only ...``; un-run rows are preserved).  On noisy runners, repeat the
+update a few times: it overwrites with the latest run, so keep the slowest
+(largest) values if consecutive runs disagree — the checked-in file holds
+max-over-runs values for exactly that reason.
 """
 import argparse
+import json
+import os
 import sys
 
 from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
                         bench_power, bench_roofline, bench_scheduler,
-                        bench_serving)
+                        bench_serving, bench_sharded_mining)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -26,13 +41,82 @@ SUITES = {
     "B5": ("roofline", bench_roofline.run),
     "B6": ("pipeline", bench_pipeline.run),
     "B7": ("serving", bench_serving.run),
+    "B8": ("sharded_mining", bench_sharded_mining.run),
 }
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+
+def _load_baselines(path):
+    with open(path) as f:
+        data = json.load(f)
+    return data
+
+
+def _update_baselines(path, rows):
+    data = {"meta": {}, "us_per_call": {}}
+    if os.path.exists(path):
+        data = _load_baselines(path)
+    data.setdefault("meta", {})
+    data["meta"]["refresh"] = "python -m benchmarks.run --update-baselines"
+    base = data.setdefault("us_per_call", {})
+    for name, us, _ in rows:
+        if us > 0 and not name.endswith("_FAILED"):
+            base[name] = round(us, 2)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# baselines updated: {path} ({len(base)} rows)", file=sys.stderr)
+
+
+def _check_baselines(path, rows, factor, suite_names):
+    base = _load_baselines(path).get("us_per_call", {})
+    regressed, unknown = [], []
+    measured = set()
+    for name, us, _ in rows:
+        if us <= 0 or name.endswith("_FAILED"):
+            continue
+        measured.add(name)
+        want = base.get(name)
+        if want is None or want <= 0:
+            unknown.append(name)
+            continue
+        if us > factor * want:
+            regressed.append(f"{name}: {us:.2f}us > {factor:.1f}x "
+                             f"baseline {want:.2f}us")
+    if unknown:
+        print(f"# baseline has no entry for {len(unknown)} row(s) "
+              f"(not gated): {', '.join(unknown)} — refresh with "
+              "--update-baselines", file=sys.stderr)
+    # a gated row that stopped being emitted must not pass silently — it
+    # usually means a suite clamped/renamed and the gate lost coverage.
+    # Only look at rows belonging to the suites that actually ran, so a
+    # --only B8 leg is not spammed about the B6/B7 rows it never measures.
+    prefixes = tuple(f"{n}_" for n in suite_names)
+    stale = sorted(k for k in base
+                   if k not in measured and k.startswith(prefixes))
+    if stale:
+        print(f"# {len(stale)} baseline row(s) not measured this run "
+              f"(gate coverage lost if unexpected): {', '.join(stale)}",
+              file=sys.stderr)
+    return regressed
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma list of suite ids")
-    args, _ = ap.parse_known_args()
+    ap.add_argument("--update-baselines", nargs="?", const=DEFAULT_BASELINES,
+                    default=None, metavar="PATH",
+                    help="write measured us_per_call into the baseline file "
+                         f"(default {DEFAULT_BASELINES})")
+    ap.add_argument("--check-baselines", nargs="?", const=DEFAULT_BASELINES,
+                    default=None, metavar="PATH",
+                    help="fail if any row regresses past --regression-factor "
+                         "x its baseline")
+    ap.add_argument("--regression-factor", type=float, default=2.0)
+    # strict parse: a typo'd --check-baselines must not silently disable
+    # the CI regression gate
+    args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(SUITES)
     unknown = only - set(SUITES)
     if unknown:
@@ -53,8 +137,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.2f},{derived:.4f}")
+
+    if args.update_baselines:
+        _update_baselines(args.update_baselines, rows)
+    regressions = []
+    if args.check_baselines:
+        regressions = _check_baselines(args.check_baselines, rows,
+                                       args.regression_factor,
+                                       [SUITES[s][0] for s in only])
+        for r in regressions:
+            print(f"# REGRESSION {r}", file=sys.stderr)
+        if not regressions:
+            print("# baseline check OK", file=sys.stderr)
+
     if failed:   # every suite still reports, but CI must see the failure
         sys.exit(f"benchmark suites failed: {','.join(failed)}")
+    if regressions:
+        sys.exit(f"{len(regressions)} benchmark regression(s) past "
+                 f"{args.regression_factor:.1f}x baseline")
 
 
 if __name__ == "__main__":

@@ -74,10 +74,17 @@ class MBScheduler:
     # ------------------------------------------------------------------
     # paper function 3: single-threaded task -> best core, gate the rest
     # ------------------------------------------------------------------
-    def assign_serial(self, task: TaskSpec) -> Assignment:
+    def assign_serial(self, task: TaskSpec,
+                      device: Optional[int] = None) -> Assignment:
+        """`device` pins the task (the sharded runtime routes driver-side
+        phases to rank 0, where the host process lives); otherwise the most
+        capable core meeting `min_speed` wins."""
         speeds = self.profile.speeds
-        ok = np.where(speeds >= task.min_speed)[0]
-        dev = int(ok[np.argmax(speeds[ok])]) if len(ok) else int(np.argmax(speeds))
+        if device is not None:
+            dev = int(device)
+        else:
+            ok = np.where(speeds >= task.min_speed)[0]
+            dev = int(ok[np.argmax(speeds[ok])]) if len(ok) else int(np.argmax(speeds))
         finish = np.zeros(self.profile.n)
         finish[dev] = task.cost / speeds[dev]
         gated = [d for d in range(self.profile.n) if d != dev]

@@ -10,7 +10,7 @@ vector, not a re-compile).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
@@ -48,3 +48,30 @@ def plan_batches(profile: HeterogeneityProfile, global_batch: int,
 def replan(profile: HeterogeneityProfile, plan: BatchPlan) -> BatchPlan:
     """Dynamic re-plan after EWMA throughput updates (core switching)."""
     return plan_batches(profile, plan.global_batch, plan.microbatch)
+
+
+def plan_shard_rows(profile: HeterogeneityProfile, n_rows: int,
+                    row_block: int = 8,
+                    alive: Optional[np.ndarray] = None) -> np.ndarray:
+    """Per-rank *real* row counts for a sharded bitmap: blocks of `row_block`
+    rows split ∝ speed over the alive ranks (dead ranks get 0), Σ equal to
+    `n_rows` rounded up to a block multiple.
+
+    This is the mining plane's version of `plan_batches`: every shard keeps
+    one static padded shape, so heterogeneity (and failure re-plans) change
+    only this integer vector, never the compiled program.
+    """
+    if n_rows <= 0:
+        raise ValueError(f"n_rows must be positive, got {n_rows}")
+    alive = (np.ones(profile.n, dtype=bool) if alive is None
+             else np.asarray(alive, dtype=bool))
+    if alive.shape != (profile.n,):
+        raise ValueError(f"alive mask shape {alive.shape} != ({profile.n},)")
+    if not alive.any():
+        raise RuntimeError("all ranks dead — nothing can hold the bitmap")
+    n_blocks = -(-n_rows // row_block)             # ceil
+    sub = HeterogeneityProfile(profile.speeds[alive])
+    plan = plan_batches(sub, n_blocks * row_block, row_block)
+    rows = np.zeros(profile.n, dtype=np.int64)
+    rows[np.nonzero(alive)[0]] = plan.counts * row_block
+    return rows

@@ -1,0 +1,416 @@
+"""Distributed mining plane — shard_map Apriori over a heterogeneous mesh.
+
+The single-device pipeline *simulates* the paper's cluster; this module
+*executes* it: the packed transaction bitmap is partitioned across a
+data-parallel mesh axis, `support_count` runs per shard inside `shard_map`
+as the map phase, and partial support vectors reduce through the psum
+combiner tree in :func:`repro.core.mapreduce.run_sharded`.
+
+Heterogeneity shows up as shard *composition*, not shard shape: every rank
+owns one static ``[width, n_items]`` slab (a jit-cache requirement), but the
+number of *real* transaction rows inside it is planned ∝ core speed by
+:func:`repro.data.sharding.plan_shard_rows` — padding rows are all-zero and
+therefore inert for support counting.  A failure (``device_loss``) or
+straggler observation re-plans that integer vector mid-mine (the paper's
+dynamic core switching): the dead rank's slab becomes pure padding (gated
+watts in the power model) and its row blocks re-issue to survivors, with
+the move counts surfaced in the :class:`PipelineReport`.
+
+Serial phases (candidate generation, rule extraction) run host-side on the
+driver process, which is co-located with mesh rank 0 — they are routed
+there explicitly via ``MBScheduler.assign_serial(device=0)`` so the report
+still accounts the paper's power-gating for them.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.mapreduce import MapReduceJob, run_sharded
+from repro.core.itemsets import (AprioriResult, generate_candidates,
+                                 itemsets_to_bitmap)
+from repro.core.power import PowerModel
+from repro.core.rules import generate_rules
+from repro.core.scheduler import MBScheduler
+from repro.data.sharding import plan_shard_rows
+from repro.distributed.fault import FaultPlan
+from repro.kernels.support_count.ref import support_count_ref
+from repro.pipeline.dataplane import pad_candidates, resolve_backend
+from repro.pipeline.pipeline import (Baskets, PipelineConfig, PipelineResult,
+                                     ingest_baskets, model_serial_phase)
+from repro.pipeline.report import PipelineReport, RoundReport, busy_list
+
+DEFAULT_AXIS = "shards"
+
+
+# ---------------------------------------------------------------------------
+# mesh + profile helpers
+# ---------------------------------------------------------------------------
+
+def make_shard_mesh(n_shards: Optional[int] = None,
+                    axis: str = DEFAULT_AXIS) -> Mesh:
+    """1-D mesh over the first `n_shards` local devices (default: all)."""
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_shards={n} but only {len(devs)} devices visible "
+                         "(set XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N for simulated multi-device CPU meshes)")
+    return Mesh(np.asarray(devs[:n]), (axis,))
+
+
+def mesh_profile(n: int,
+                 base: Optional[HeterogeneityProfile] = None
+                 ) -> HeterogeneityProfile:
+    """Cycle a base profile's speeds (default: the paper's 80/120/200/400)
+    out to an n-rank mesh — the paper's core mix at pod scale."""
+    base = base or HeterogeneityProfile.paper()
+    speeds = np.resize(base.speeds, n)
+    names = [f"{base.names[i % base.n]}.{i // base.n}" for i in range(n)]
+    return HeterogeneityProfile(speeds, names=names,
+                                ewma_alpha=base.ewma_alpha)
+
+
+# ---------------------------------------------------------------------------
+# shard planning
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Static-shape shard layout: rank d owns rows[d] real rows inside a
+    zero-padded ``[width, n_items]`` slab."""
+
+    rows: np.ndarray          # [n_shards] real rows per rank (row_block ·)
+    width: int                # padded rows per shard (static, = max rows)
+    row_block: int
+    alive: np.ndarray         # [n_shards] bool
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.rows)
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.rows.sum()) // self.row_block
+
+    def block_owners(self) -> np.ndarray:
+        """owner rank of each row block, in global block order (blocks are
+        assigned contiguously, so a re-plan is comparable block-by-block)."""
+        return np.repeat(np.arange(self.n_shards),
+                         self.rows // self.row_block)
+
+    def shard_costs(self, n_items: int) -> np.ndarray:
+        """Per-rank work units (bytes of *real* transaction data) — the same
+        units the simulated pipeline's tile costs use."""
+        return self.rows.astype(np.float64) * n_items
+
+
+def plan_shards(profile: HeterogeneityProfile, n_rows: int,
+                row_block: int = 8,
+                alive: Optional[np.ndarray] = None) -> ShardPlan:
+    """Heterogeneity-aware shard plan over the alive ranks."""
+    alive = (np.ones(profile.n, dtype=bool) if alive is None
+             else np.asarray(alive, dtype=bool))
+    rows = plan_shard_rows(profile, n_rows, row_block=row_block, alive=alive)
+    width = int(rows.max())
+    return ShardPlan(rows=rows, width=width, row_block=row_block,
+                     alive=alive.copy())
+
+
+def shard_bitmap(T: np.ndarray, plan: ShardPlan) -> np.ndarray:
+    """Lay T out rank-major per the plan: rank d's slab holds its contiguous
+    row range zero-padded to `width`.  Shape [n_shards * width, n_items]."""
+    n_tx, n_items = T.shape
+    out = np.zeros((plan.n_shards * plan.width, n_items), dtype=T.dtype)
+    start = 0
+    for d in range(plan.n_shards):
+        r = min(int(plan.rows[d]), max(n_tx - start, 0))
+        out[d * plan.width:d * plan.width + r] = T[start:start + r]
+        start += int(plan.rows[d])
+    return out
+
+
+def count_moves(old: ShardPlan, new: ShardPlan) -> Tuple[int, int]:
+    """(switches, reissued) between two plans over the same bitmap:
+    `switches` = row blocks that changed owner between two live ranks,
+    `reissued` = row blocks re-issued away from a rank that died."""
+    a, b = old.block_owners(), new.block_owners()
+    assert len(a) == len(b), "plans cover different bitmaps"
+    moved = a != b
+    from_dead = moved & ~new.alive[a]
+    return int((moved & ~from_dead).sum()), int(from_dead.sum())
+
+
+# ---------------------------------------------------------------------------
+# jax-traceable map bodies (module-level: stable identities keep the
+# run_sharded program cache warm across rounds and runs)
+# ---------------------------------------------------------------------------
+
+def _item_counts_map(shard):
+    return shard.sum(axis=0, dtype=jnp.int32)
+
+
+def _support_map_ref(shard, C):
+    return support_count_ref(shard, C)
+
+
+def _support_map_pallas(shard, C):
+    from repro.kernels.support_count.ops import support_count
+    return support_count(shard, C)
+
+
+# ---------------------------------------------------------------------------
+# the miner
+# ---------------------------------------------------------------------------
+
+class ShardedMiner:
+    """MarketBasketPipeline semantics, executed over a real device mesh.
+
+    Produces the same ``PipelineResult`` (bit-identical supports and rules —
+    tested against the single-device plane) with a report whose map phases
+    were *executed* under shard_map + psum rather than event-simulated.
+    """
+
+    def __init__(self, mesh: Optional[Mesh] = None,
+                 profile: Optional[HeterogeneityProfile] = None,
+                 config: Optional[PipelineConfig] = None,
+                 scheduler: Optional[MBScheduler] = None,
+                 power: Optional[PowerModel] = None,
+                 row_block: int = 8,
+                 verify_rounds: bool = False):
+        self.mesh = mesh if mesh is not None else make_shard_mesh()
+        self.axis = self.mesh.axis_names[0]
+        n = self.mesh.shape[self.axis]
+        self.profile = profile or mesh_profile(n)
+        if self.profile.n != n:
+            raise ValueError(f"profile has {self.profile.n} ranks but mesh "
+                             f"axis {self.axis!r} has {n}")
+        self.config = config or PipelineConfig()
+        self.scheduler = scheduler or MBScheduler(self.profile,
+                                                  policy=self.config.policy)
+        if power is not None:
+            self.power = power
+        elif self.config.power == "cpu":
+            self.power = PowerModel.cpu(self.profile)
+        elif self.config.power == "tpu_v5e":
+            self.power = PowerModel.tpu_v5e(n)
+        elif self.config.power == "none":
+            self.power = None
+        else:
+            raise ValueError(f"unknown power model {self.config.power!r}")
+        self.backend = resolve_backend(self.config.data_plane)
+        self.row_block = row_block
+        self.verify_rounds = verify_rounds
+        # stable job objects -> run_sharded's compiled-program cache hits
+        # whenever a later round (or run) repeats a batch shape
+        self._item_jobs: dict = {}
+        self._support_jobs: dict = {}
+
+    # ------------------------------------------------------------------
+    def _item_job(self, n_items: int) -> MapReduceJob:
+        job = self._item_jobs.get(n_items)
+        if job is None:
+            job = MapReduceJob(
+                name=f"sharded-round1-item-counts-{n_items}",
+                map_fn=_item_counts_map,
+                combine_fn=lambda a, b: a + b,
+                zero_fn=lambda m=n_items: jnp.zeros(m, jnp.int32))
+            self._item_jobs[n_items] = job
+        return job
+
+    def _support_job(self, m_padded: int) -> MapReduceJob:
+        job = self._support_jobs.get(m_padded)
+        if job is None:
+            map_fn = (_support_map_pallas if self.backend == "pallas"
+                      else _support_map_ref)
+            job = MapReduceJob(
+                name=f"sharded-support-m{m_padded}",
+                map_fn=map_fn,
+                combine_fn=lambda a, b: a + b,
+                zero_fn=lambda m=m_padded: jnp.zeros(m, jnp.int32))
+            self._support_jobs[m_padded] = job
+        return job
+
+    def _serial(self, name: str, cost: float, host_time_s: float):
+        # driver phases execute on the host co-located with rank 0
+        return model_serial_phase(self.scheduler, self.power, self.profile,
+                                  name, cost, host_time_s, device=0)
+
+    # ------------------------------------------------------------------
+    def _apply_faults(self, k: int, faults: Optional[FaultPlan],
+                      alive: np.ndarray, plan: ShardPlan, T: np.ndarray,
+                      report: PipelineReport
+                      ) -> Tuple[ShardPlan, Optional[jnp.ndarray],
+                                 int, int, List[int]]:
+        """Consume round-k fault events; returns the (possibly new) plan,
+        re-laid-out device data (or None if unchanged), and this round's
+        (switches, reissued, newly_dead)."""
+        events = faults.at(k) if faults else []
+        newly_dead: List[int] = []
+        replan = False
+        for e in events:
+            if e.kind == "device_loss" and alive[e.device]:
+                alive[e.device] = False
+                newly_dead.append(e.device)
+                replan = True
+            elif e.kind == "straggler":
+                # observed rate = current speed / slowdown, EWMA'd into the
+                # profile -> the re-plan gives the straggler proportionally
+                # fewer row blocks (severity 1.0 = no slowdown, no change)
+                self.profile.observe(
+                    e.device,
+                    work_done=float(self.profile.speeds[e.device]),
+                    seconds=float(e.severity))
+                replan = True
+        if not replan:
+            return plan, None, 0, 0, newly_dead
+        new_plan = plan_shards(self.profile, T.shape[0],
+                               row_block=self.row_block, alive=alive)
+        switches, reissued = count_moves(plan, new_plan)
+        self.scheduler.switches += switches + reissued
+        report.replans += 1
+        report.shard_rows = [int(r) for r in new_plan.rows]
+        return (new_plan, jnp.asarray(shard_bitmap(T, new_plan)),
+                switches, reissued, newly_dead)
+
+    def _check_round(self, k: int, T: np.ndarray, C_padded: Optional[np.ndarray],
+                     counts: np.ndarray) -> None:
+        """Cross-shard invariant: the psum-reduced global support vector must
+        equal the single-device oracle on the unsharded bitmap."""
+        if C_padded is None:                       # k=1 column sums
+            want = T.sum(axis=0, dtype=np.int64)[:len(counts)]
+        else:
+            want = np.asarray(support_count_ref(
+                jnp.asarray(T), jnp.asarray(C_padded)),
+                dtype=np.int64)[:len(counts)]
+        if not np.array_equal(counts, want):
+            bad = int(np.flatnonzero(counts != want)[0])
+            raise RuntimeError(
+                f"cross-shard invariant violated at round k={k}: "
+                f"candidate {bad} counted {counts[bad]} sharded vs "
+                f"{want[bad]} single-device")
+
+    # ------------------------------------------------------------------
+    def run(self, baskets: Baskets,
+            faults: Optional[FaultPlan] = None) -> PipelineResult:
+        cfg = self.config
+        t_start = time.perf_counter()
+
+        T, n_items_raw, n_tx_raw = ingest_baskets(baskets)
+        n_tx, n_items = T.shape                    # lane-padded (internal)
+        min_sup = cfg.abs_support(n_tx_raw)
+        n = self.profile.n
+
+        alive = np.ones(n, dtype=bool)
+        plan = plan_shards(self.profile, n_tx, row_block=self.row_block,
+                           alive=alive)
+        data = jnp.asarray(shard_bitmap(T, plan))
+
+        report = PipelineReport(
+            backend=self.backend, policy=self.scheduler.policy,
+            profile_speeds=[float(s) for s in self.profile.speeds],
+            n_tx=n_tx_raw, n_items=n_items_raw,
+            n_tiles=plan.n_blocks, min_support=min_sup,
+            execution="sharded", n_shards=n,
+            shard_rows=[int(r) for r in plan.rows])
+        supports = {}
+
+        # ---- round k=1: item frequency (<item, count>) ----------------
+        plan, new_data, sw, re, dead = self._apply_faults(
+            1, faults, alive, plan, T, report)
+        if new_data is not None:
+            data = new_data
+        counts_dev, rep = run_sharded(
+            self._item_job(n_items), data, self.mesh, self.axis,
+            profile=self.profile, power=self.power,
+            shard_costs=plan.shard_costs(n_items), switches=sw + re)
+        counts = np.asarray(counts_dev, dtype=np.int64)
+        if self.verify_rounds:
+            self._check_round(1, T, None, counts)
+        frequent = [(int(i),) for i in np.nonzero(
+            counts[:n_items_raw] >= min_sup)[0]]
+        for (i,) in frequent:
+            supports[(i,)] = int(counts[i])
+        report.rounds.append(RoundReport(
+            k=1, n_candidates=n_items_raw, n_frequent=len(frequent),
+            n_tiles=plan.n_blocks,
+            tiles_per_device=[int(b) for b in plan.rows // plan.row_block],
+            map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
+            switches=sw, reissued=re,
+            energy_j=rep.energy_j or 0.0, failed_devices=dead))
+
+        # ---- rounds k>=2: serial candidate-gen + sharded counting -----
+        k = 2
+        while frequent and (cfg.max_k == 0 or k <= cfg.max_k):
+            plan, new_data, sw, re, dead = self._apply_faults(
+                k, faults, alive, plan, T, report)
+            if new_data is not None:
+                data = new_data
+            t0 = time.perf_counter()
+            cands = generate_candidates(frequent)
+            host_t = time.perf_counter() - t0
+            serial = self._serial(
+                f"mba-candgen-k{k}",
+                cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
+                host_time_s=host_t)
+            if not cands:
+                report.rounds.append(RoundReport(
+                    k=k, n_candidates=0, n_frequent=0, n_tiles=0,
+                    tiles_per_device=[0] * n,
+                    map_makespan_s=0.0, map_busy_s=[0.0] * n,
+                    switches=sw, reissued=re, energy_j=0.0, serial=serial,
+                    failed_devices=dead))
+                break
+
+            C = pad_candidates(itemsets_to_bitmap(cands, n_items),
+                               cfg.m_bucket)
+            Cj = jnp.asarray(C)
+            sup_dev, rep = run_sharded(
+                self._support_job(C.shape[0]), data, self.mesh, self.axis,
+                extra_args=(Cj,),
+                profile=self.profile, power=self.power,
+                shard_costs=plan.shard_costs(n_items), switches=sw + re)
+            # padded candidate rows are all-zero masks and would match every
+            # transaction — slice to the true count, never trust padding
+            sup = np.asarray(sup_dev, dtype=np.int64)[:len(cands)]
+            if self.verify_rounds:
+                self._check_round(k, T, C, sup)
+            frequent = []
+            for c, s in zip(cands, sup):
+                if s >= min_sup:
+                    supports[c] = int(s)
+                    frequent.append(c)
+            report.rounds.append(RoundReport(
+                k=k, n_candidates=len(cands), n_frequent=len(frequent),
+                n_tiles=plan.n_blocks,
+                tiles_per_device=[int(b) for b in plan.rows // plan.row_block],
+                map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
+                switches=sw, reissued=re, energy_j=rep.energy_j or 0.0,
+                serial=serial, m_padded=int(C.shape[0]),
+                failed_devices=dead))
+            k += 1
+
+        # ---- step 3: association rules (driver, rank 0) ---------------
+        t0 = time.perf_counter()
+        rules = generate_rules(
+            AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
+            cfg.min_confidence, min_lift=cfg.min_lift)
+        host_t = time.perf_counter() - t0
+        report.rules_phase = self._serial(
+            "mba-rules",
+            cost=max(1.0, len(supports) * cfg.serial_unit_cost),
+            host_time_s=host_t)
+
+        report.n_itemsets = len(supports)
+        report.n_rules = len(rules)
+        report.wall_time_s = time.perf_counter() - t_start
+        return PipelineResult(supports=supports, rules=rules, report=report,
+                              n_tx=n_tx_raw)

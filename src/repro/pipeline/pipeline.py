@@ -45,6 +45,51 @@ from repro.pipeline.report import (PipelineReport, RoundReport, SerialPhase,
 Baskets = Union[np.ndarray, Sequence[Sequence[int]]]
 
 
+def ingest_baskets(baskets: Baskets) -> Tuple[np.ndarray, int, int]:
+    """Validate + pack baskets into the kernel bitmap layout.
+
+    Returns ``(lane-padded bitmap, raw item count, raw tx count)``.  Shared
+    by the single-device pipeline and the sharded miner so both planes agree
+    byte-for-byte on what they mine.
+    """
+    if isinstance(baskets, np.ndarray):
+        if baskets.ndim != 2:
+            raise ValueError(f"bitmap must be 2-D, got {baskets.shape}")
+        # validate BEFORE the uint8 cast: casting would truncate floats
+        # (0.9 -> 0) and wrap negatives, hiding bad input behind an
+        # empty-but-plausible mining result
+        if baskets.size and not ((baskets == 0) | (baskets == 1)).all():
+            raise ValueError("bitmap must contain only 0/1 — pass "
+                             "transaction lists for count-style data")
+        T = baskets.astype(np.uint8, copy=False)
+    else:
+        T = pack_transactions(baskets)
+    return pad_items(T), T.shape[1], T.shape[0]
+
+
+def model_serial_phase(scheduler: MBScheduler, power: Optional[PowerModel],
+                       profile: HeterogeneityProfile, name: str, cost: float,
+                       host_time_s: float,
+                       device: Optional[int] = None) -> SerialPhase:
+    """Model a single-threaded phase: one core runs, the rest gate off.
+
+    `device` pins the core (the sharded plane routes driver phases to rank
+    0); otherwise `assign_serial` picks the most capable one.
+    """
+    asg = scheduler.assign_serial(TaskSpec(name, cost, parallel=False),
+                                  device=device)
+    dev = asg.serial_device
+    sim_t = float(asg.est_finish[dev])
+    energy = 0.0
+    if power is not None:
+        busy = np.zeros(profile.n)
+        busy[dev] = sim_t
+        energy = power.energy(busy, sim_t, gated=asg.gated)
+    return SerialPhase(name=name, device=dev, cost=cost, sim_time_s=sim_t,
+                       host_time_s=host_time_s, energy_j=energy,
+                       gated=list(asg.gated))
+
+
 @dataclass(frozen=True)
 class PipelineConfig:
     """Knobs for one mining run.  min_support <= 1 is a fraction of n_tx
@@ -115,36 +160,15 @@ class MarketBasketPipeline:
     # ------------------------------------------------------------------
     # phases
     # ------------------------------------------------------------------
-    def _ingest(self, baskets: Baskets) -> Tuple[np.ndarray, int]:
-        """Returns (lane-padded bitmap, true item count before padding)."""
-        if isinstance(baskets, np.ndarray):
-            if baskets.ndim != 2:
-                raise ValueError(f"bitmap must be 2-D, got {baskets.shape}")
-            # validate BEFORE the uint8 cast: casting would truncate floats
-            # (0.9 -> 0) and wrap negatives, hiding bad input behind an
-            # empty-but-plausible mining result
-            if baskets.size and not ((baskets == 0) | (baskets == 1)).all():
-                raise ValueError("bitmap must contain only 0/1 — pass "
-                                 "transaction lists for count-style data")
-            T = baskets.astype(np.uint8, copy=False)
-        else:
-            T = pack_transactions(baskets)
-        return pad_items(T), T.shape[1]
+    def _ingest(self, baskets: Baskets) -> Tuple[np.ndarray, int, int]:
+        """Returns (lane-padded bitmap, raw item count, raw tx count)."""
+        return ingest_baskets(baskets)
 
     def _serial_phase(self, name: str, cost: float,
                       host_time_s: float) -> SerialPhase:
         """Model a single-threaded phase: best core runs, the rest gate off."""
-        asg = self.scheduler.assign_serial(TaskSpec(name, cost, parallel=False))
-        dev = asg.serial_device
-        sim_t = float(asg.est_finish[dev])
-        energy = 0.0
-        if self.power is not None:
-            busy = np.zeros(self.profile.n)
-            busy[dev] = sim_t
-            energy = self.power.energy(busy, sim_t, gated=asg.gated)
-        return SerialPhase(name=name, device=dev, cost=cost, sim_time_s=sim_t,
-                           host_time_s=host_time_s, energy_j=energy,
-                           gated=list(asg.gated))
+        return model_serial_phase(self.scheduler, self.power, self.profile,
+                                  name, cost, host_time_s)
 
     def _map_round(self, job: MapReduceJob, tiles: List[np.ndarray],
                    failures: Optional[List[FailureEvent]]
@@ -176,9 +200,7 @@ class MarketBasketPipeline:
         cfg = self.config
         t_start = time.perf_counter()
 
-        T, n_items_raw = self._ingest(baskets)
-        n_tx_raw = (baskets.shape[0] if isinstance(baskets, np.ndarray)
-                    else len(baskets))
+        T, n_items_raw, n_tx_raw = self._ingest(baskets)
         n_tx, n_items = T.shape                     # lane-padded (internal)
         min_sup = cfg.abs_support(n_tx_raw)
         # device-resident once: every round's map phase reuses these tiles,

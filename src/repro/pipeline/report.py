@@ -73,6 +73,11 @@ class PipelineReport:
     n_itemsets: int = 0
     n_rules: int = 0
     wall_time_s: float = 0.0      # host wall clock for the whole run
+    # distributed mining plane (execution == "sharded"):
+    execution: str = "simulated"  # "simulated" | "sharded"
+    n_shards: int = 0             # mesh axis size (0 = single-device plane)
+    shard_rows: List[int] = field(default_factory=list)  # final plan, per rank
+    replans: int = 0              # failure-triggered shard re-plans
 
     # ------------------------------------------------------------------
     @property
@@ -119,6 +124,13 @@ class PipelineReport:
         lines = [
             f"MarketBasketPipeline: backend={self.backend} policy={self.policy} "
             f"cores={self.profile_speeds}",
+        ]
+        if self.execution == "sharded":
+            lines.append(
+                f"  sharded: {self.n_shards} mesh ranks, rows/rank "
+                f"{'/'.join(map(str, self.shard_rows))}, "
+                f"{self.replans} re-plans")
+        lines += [
             f"  data: {self.n_tx} tx x {self.n_items} items, "
             f"{self.n_tiles} tiles, min_support={self.min_support}",
             f"  {'round':>7s} {'cands':>6s} {'freq':>6s} {'serial_s':>9s} "

@@ -27,15 +27,16 @@ from jax.experimental.shard_map import shard_map
 mesh = make_test_mesh()  # (2 data, 4 model)
 out = {}
 
-# 1. shard_map mapreduce == sequential
+# 1. shard_map mapreduce == sequential (run_sharded returns (result, report))
 data = jnp.asarray(np.random.default_rng(0).integers(0, 16, (64,)), jnp.int32)
 job = MapReduceJob("wc",
     map_fn=lambda x: jnp.bincount(x, length=16),
     combine_fn=lambda a, b: a + b,
     zero_fn=lambda: jnp.zeros(16, jnp.int32))
-got = run_sharded(job, data, mesh, axis="data")
+got, rep = run_sharded(job, data, mesh, axis="data")
 want = jnp.bincount(data, length=16)
 out["mapreduce_sharded_ok"] = bool((got == want).all())
+out["mapreduce_sharded_report_ok"] = rep.makespan >= 0.0
 
 # 2. ring all-gather == lax.all_gather
 x = jnp.arange(8.0).reshape(4, 2)
