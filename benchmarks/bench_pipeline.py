@@ -17,19 +17,19 @@ def run(csv_rows):
     # policy sweep at fixed size: simulated makespan + energy per policy
     T = generate_baskets(BasketConfig(n_tx=8192, n_items=96, seed=1))
     sims = {}
-    for policy in ("equal", "proportional", "lpt"):
+    for split in ("equal", "proportional", "lpt"):
         pipe = MarketBasketPipeline(
             profile, PipelineConfig(min_support=0.02, n_tiles=32,
-                                    policy=policy))
+                                    split=split))
         t0 = time.perf_counter()
         res = pipe.run(T)
         wall_us = (time.perf_counter() - t0) * 1e6
         # map phases only: serial phases are policy-invariant, and this is
         # the ratio comparable to the paper's 2.50x analytic bound
-        sims[policy] = res.report.map_time_s
-        csv_rows.append((f"pipeline_{policy}_wall", wall_us,
+        sims[split] = res.report.map_time_s
+        csv_rows.append((f"pipeline_{split}_wall", wall_us,
                          res.report.n_itemsets))
-        csv_rows.append((f"pipeline_{policy}_sim_makespan_us",
+        csv_rows.append((f"pipeline_{split}_sim_makespan_us",
                          res.report.total_time_s * 1e6,
                          res.report.total_energy_j))
     csv_rows.append(("pipeline_lpt_speedup_vs_equal", 0.0,

@@ -11,6 +11,8 @@
   B8 bench_sharded_mining  — distributed mining plane (shard-count scaling;
                              needs XLA_FLAGS=--xla_force_host_platform_
                              device_count=8 for the full curve)
+  B9 bench_policies        — switching policies (static vs dynamic vs
+                             costmodel under an injected straggler)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -30,8 +32,8 @@ import os
 import sys
 
 from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
-                        bench_power, bench_roofline, bench_scheduler,
-                        bench_serving, bench_sharded_mining)
+                        bench_policies, bench_power, bench_roofline,
+                        bench_scheduler, bench_serving, bench_sharded_mining)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -42,6 +44,7 @@ SUITES = {
     "B6": ("pipeline", bench_pipeline.run),
     "B7": ("serving", bench_serving.run),
     "B8": ("sharded_mining", bench_sharded_mining.run),
+    "B9": ("policies", bench_policies.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")

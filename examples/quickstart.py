@@ -17,15 +17,15 @@ from repro.pipeline import MarketBasketPipeline, PipelineConfig
 # 1. transactional data (IBM-Quest-style synthetic store data)
 T = generate_baskets(BasketConfig(n_tx=4096, n_items=96, seed=42))
 
-# 2. the full pipeline on the paper's system, per scheduling policy
+# 2. the full pipeline on the paper's system, per split strategy
 profile = HeterogeneityProfile.paper()            # 80 / 120 / 200 / 400
 results = {}
-for policy in ("equal", "proportional", "lpt"):
+for split in ("equal", "proportional", "lpt"):
     pipe = MarketBasketPipeline(
         profile,
         PipelineConfig(min_support=80, min_confidence=0.65,
-                       n_tiles=32, policy=policy))
-    results[policy] = pipe.run(T)
+                       n_tiles=32, split=split))
+    results[split] = pipe.run(T)
 
 # 3. the structured report for the MB Scheduler (LPT) run
 best = results["lpt"]

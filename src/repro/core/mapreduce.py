@@ -85,16 +85,29 @@ class SimulatedCluster:
     # ------------------------------------------------------------------
     def run(self, job: MapReduceJob, tiles: Sequence[Any],
             failures: Optional[List[FailureEvent]] = None,
-            speculate: bool = True) -> Tuple[Any, ExecReport]:
+            speculate: bool = True,
+            assignment: Optional[Assignment] = None) -> Tuple[Any, ExecReport]:
+        """`assignment` pins a pre-planned placement (the shared Runtime
+        plans through its SwitchingPolicy and passes the result here);
+        otherwise this cluster's scheduler plans statically."""
         tile_costs = np.array([job.tile_cost(t) for t in tiles], dtype=np.float64)
-        task = TaskSpec(job.name, float(tile_costs.sum()), parallel=True,
-                        n_tiles=len(tiles))
-        asg = self.scheduler.assign_parallel(task, tile_costs)
+        if assignment is not None:
+            asg = assignment
+        else:
+            task = TaskSpec(job.name, float(tile_costs.sum()), parallel=True,
+                            n_tiles=len(tiles))
+            asg = self.scheduler.assign_parallel(task, tile_costs)
         report = self._simulate(asg, tile_costs, failures or [], speculate)
         report.assignment = asg
         if self.power is not None:
+            # same joule definition as Runtime.run_phase: cores that ran
+            # nothing are gated, and every migration (switch OR re-issue)
+            # is priced
+            gated = [d for d in range(self.profile.n)
+                     if report.busy_s[d] == 0.0]
             report.energy_j = self.power.energy(
-                report.busy_s, report.makespan, switches=report.switches)
+                report.busy_s, report.makespan, gated=gated,
+                switches=report.switches + report.reissued)
         # --- actual computation: every tile exactly once, combiner tree ---
         result = job.zero_fn()
         for t in tiles:
@@ -210,9 +223,7 @@ def run_sharded(job: MapReduceJob, data: jnp.ndarray, mesh,
                 axis: str = "data", *,
                 extra_args: Tuple[Any, ...] = (),
                 profile: Optional[HeterogeneityProfile] = None,
-                power: Optional[PowerModel] = None,
                 shard_costs: Optional[np.ndarray] = None,
-                switches: int = 0,
                 ) -> Tuple[Any, ExecReport]:
     """Execute map over equal shards of `data`'s leading axis; reduce with a
     psum tree.  Returns ``(result, ExecReport)`` like ``SimulatedCluster.run``
@@ -222,14 +233,12 @@ def run_sharded(job: MapReduceJob, data: jnp.ndarray, mesh,
     a pytree of arrays with shapes independent of the shard size.
     ``extra_args`` are replicated to every shard (e.g. a candidate bitmap).
 
-    Timing/energy: with a `profile` (and per-rank `shard_costs` in the same
-    work units the scheduler uses — defaults to an equal split of
-    ``data.nbytes``), busy seconds are ``cost / speed`` per rank and ranks
-    with zero cost are power-gated; `power` then prices the round in joules
-    (the previously-silent ``energy_j=None`` gap on this path), including
-    ``switch_joules`` per caller-reported `switches` (shard moves from a
-    re-plan) — the same billing the simulated path applies.  Without a
-    profile the report carries measured wall time only.
+    Timing: with a `profile` (and per-rank `shard_costs` in the same work
+    units the scheduler uses — defaults to an equal split of
+    ``data.nbytes``), busy seconds are ``cost / speed`` per rank; without a
+    profile the report carries measured wall time only.  Energy and switch
+    pricing live in ``repro.runtime.Runtime.run_phase`` — the one place
+    every plane's accounting happens — not here.
     """
     n_shards = mesh.shape[axis]
     f = _sharded_fn(job, mesh, axis, len(extra_args))
@@ -247,13 +256,9 @@ def run_sharded(job: MapReduceJob, data: jnp.ndarray, mesh,
         shard_costs = np.asarray(shard_costs, dtype=np.float64)
         busy = shard_costs / profile.speeds
         makespan = float(busy.max()) if len(busy) else 0.0
-        gated = [d for d in range(n_shards) if shard_costs[d] == 0.0]
-        rep = ExecReport(makespan=makespan, busy_s=busy, switches=switches,
+        rep = ExecReport(makespan=makespan, busy_s=busy,
                          tiles_done=[int(c > 0) for c in shard_costs])
-        if power is not None:
-            rep.energy_j = power.energy(busy, makespan, gated=gated,
-                                        switches=switches)
     else:
         rep = ExecReport(makespan=wall_s, busy_s=np.zeros(n_shards),
-                         switches=switches, tiles_done=[1] * n_shards)
+                         tiles_done=[1] * n_shards)
     return result, rep

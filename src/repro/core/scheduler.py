@@ -39,9 +39,17 @@ class TaskSpec:
     parallel: bool = True          # paper: multi- vs single-threaded
     n_tiles: int = 0               # parallel tasks are pre-split into tiles
     min_speed: float = 0.0         # serial tasks: required core capability
+    # phases with the same family and tile arity recur over the same tile
+    # set (mining rounds over one tiled bitmap, serving batches of one
+    # bucket) — dynamic switching tracks plan drift within a family
+    family: str = ""               # defaults to `name`
 
     def tile_cost(self) -> float:
         return self.cost / max(self.n_tiles, 1)
+
+    @property
+    def family_key(self) -> str:
+        return self.family or self.name
 
 
 @dataclass
@@ -52,6 +60,9 @@ class Assignment:
     est_finish: np.ndarray                 # [n_devices] seconds
     gated: List[int] = field(default_factory=list)   # powered-off devices
     serial_device: Optional[int] = None
+    # assign_serial could not satisfy the task's min_speed and fell back to
+    # the fastest core — surfaced in the phase record, never hidden
+    constraint_violated: bool = False
 
     @property
     def makespan(self) -> float:
@@ -80,16 +91,23 @@ class MBScheduler:
         phases to rank 0, where the host process lives); otherwise the most
         capable core meeting `min_speed` wins."""
         speeds = self.profile.speeds
+        violated = False
         if device is not None:
             dev = int(device)
+            violated = speeds[dev] < task.min_speed
         else:
             ok = np.where(speeds >= task.min_speed)[0]
-            dev = int(ok[np.argmax(speeds[ok])]) if len(ok) else int(np.argmax(speeds))
+            if len(ok):
+                dev = int(ok[np.argmax(speeds[ok])])
+            else:               # no core qualifies: fastest core, flagged
+                dev = int(np.argmax(speeds))
+                violated = True
         finish = np.zeros(self.profile.n)
         finish[dev] = task.cost / speeds[dev]
         gated = [d for d in range(self.profile.n) if d != dev]
         return Assignment([[0] if d == dev else [] for d in range(self.profile.n)],
-                          finish, gated=gated, serial_device=dev)
+                          finish, gated=gated, serial_device=dev,
+                          constraint_violated=bool(violated))
 
     # ------------------------------------------------------------------
     # paper function 4: multi-threaded task -> proportional / LPT split
@@ -184,6 +202,37 @@ class MBScheduler:
                 moves.append((t, helper))
         self.switches += len(moves)
         return moves
+
+    # ------------------------------------------------------------------
+    # commit speculative moves: without this, the straggler still owns the
+    # re-issued tiles and a repeated speculate() re-issues the very same
+    # ones — the assignment must be mutated for the loop to close
+    # ------------------------------------------------------------------
+    def apply_moves(self, assignment: Assignment,
+                    moves: Sequence[Tuple[int, int]],
+                    tile_costs: np.ndarray) -> Assignment:
+        """Re-home each ``(tile, new_device)`` and re-derive finish times.
+
+        Returns a fresh :class:`Assignment` (est_finish / gated recomputed
+        from the moved tile sets); the input assignment is not mutated.
+        """
+        if not moves:
+            return assignment
+        tiles_of = [list(ts) for ts in assignment.tiles_of]
+        owner = {t: d for d, ts in enumerate(tiles_of) for t in ts}
+        for t, dst in moves:
+            src = owner.get(t)
+            if src is None:
+                raise ValueError(f"move of unassigned tile {t}")
+            if src == dst:
+                continue
+            tiles_of[src].remove(t)
+            tiles_of[dst].append(t)
+            owner[t] = dst
+        new = self._finish(tiles_of, np.asarray(tile_costs, dtype=np.float64))
+        new.serial_device = assignment.serial_device
+        new.constraint_violated = assignment.constraint_violated
+        return new
 
     # ------------------------------------------------------------------
     # lower bound for tests: makespan >= max(total/Σspeed, max_tile/fastest)

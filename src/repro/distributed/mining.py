@@ -16,16 +16,20 @@ dynamic core switching): the dead rank's slab becomes pure padding (gated
 watts in the power model) and its row blocks re-issue to survivors, with
 the move counts surfaced in the :class:`PipelineReport`.
 
-Serial phases (candidate generation, rule extraction) run host-side on the
-driver process, which is co-located with mesh rank 0 — they are routed
-there explicitly via ``MBScheduler.assign_serial(device=0)`` so the report
-still accounts the paper's power-gating for them.
+Scheduling and accounting run on the shared :class:`repro.runtime.Runtime`:
+the shard layout is handed to ``run_phase`` as a *pinned* assignment (rank
+d owns tile d with its planned row bytes), shard-re-plan moves are charged
+as this phase's switches/re-issues, and time/energy come off the same
+ledger the simulated and serving planes use.  Serial phases (candidate
+generation, rule extraction) run host-side on the driver process, which is
+co-located with mesh rank 0 — they are routed there via
+``Runtime.run_serial(device=0)``.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import List, Optional, Tuple
+from typing import List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -38,15 +42,16 @@ from repro.core.mapreduce import MapReduceJob, run_sharded
 from repro.core.itemsets import (AprioriResult, generate_candidates,
                                  itemsets_to_bitmap)
 from repro.core.power import PowerModel
-from repro.core.rules import generate_rules
-from repro.core.scheduler import MBScheduler
+from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.data.sharding import plan_shard_rows
 from repro.distributed.fault import FaultPlan
 from repro.kernels.support_count.ref import support_count_ref
 from repro.pipeline.dataplane import pad_candidates, resolve_backend
 from repro.pipeline.pipeline import (Baskets, PipelineConfig, PipelineResult,
-                                     ingest_baskets, model_serial_phase)
-from repro.pipeline.report import PipelineReport, RoundReport, busy_list
+                                     ingest_baskets)
+from repro.pipeline.report import PipelineReport, RoundReport
+from repro.runtime import MeasuredPhase, Runtime, SwitchingPolicy
+from repro.core.rules import generate_rules
 
 DEFAULT_AXIS = "shards"
 
@@ -184,6 +189,7 @@ class ShardedMiner:
                  config: Optional[PipelineConfig] = None,
                  scheduler: Optional[MBScheduler] = None,
                  power: Optional[PowerModel] = None,
+                 policy: Union[str, SwitchingPolicy, None] = None,
                  row_block: int = 8,
                  verify_rounds: bool = False):
         self.mesh = mesh if mesh is not None else make_shard_mesh()
@@ -194,18 +200,14 @@ class ShardedMiner:
             raise ValueError(f"profile has {self.profile.n} ranks but mesh "
                              f"axis {self.axis!r} has {n}")
         self.config = config or PipelineConfig()
-        self.scheduler = scheduler or MBScheduler(self.profile,
-                                                  policy=self.config.policy)
-        if power is not None:
-            self.power = power
-        elif self.config.power == "cpu":
-            self.power = PowerModel.cpu(self.profile)
-        elif self.config.power == "tpu_v5e":
-            self.power = PowerModel.tpu_v5e(n)
-        elif self.config.power == "none":
-            self.power = None
-        else:
-            raise ValueError(f"unknown power model {self.config.power!r}")
+        self.runtime = Runtime(
+            self.profile,
+            policy=policy if policy is not None else self.config.policy,
+            split=self.config.split,
+            power=power if power is not None else self.config.power,
+            scheduler=scheduler)
+        self.scheduler = self.runtime.scheduler
+        self.power = self.runtime.power
         self.backend = resolve_backend(self.config.data_plane)
         self.row_block = row_block
         self.verify_rounds = verify_rounds
@@ -239,10 +241,32 @@ class ShardedMiner:
             self._support_jobs[m_padded] = job
         return job
 
-    def _serial(self, name: str, cost: float, host_time_s: float):
+    # ------------------------------------------------------------------
+    def _sharded_round(self, job: MapReduceJob, data: jnp.ndarray,
+                       plan: ShardPlan, n_items: int,
+                       extra_args: Tuple = (),
+                       switches: int = 0, reissued: int = 0):
+        """One shard_map round through the shared runtime.  The shard plan
+        *is* the assignment (rank d owns tile d, cost = its real-row bytes);
+        re-plan moves are charged to this phase; busy/energy are modeled on
+        the ledger exactly as for the other planes."""
+        costs = plan.shard_costs(n_items)
+        task = TaskSpec(job.name, float(costs.sum()), parallel=True,
+                        n_tiles=self.profile.n)
+
+        def execute(_asg, _costs):
+            result, rep = run_sharded(job, data, self.mesh, self.axis,
+                                      extra_args=extra_args)
+            return MeasuredPhase(result=result, wall_s=rep.makespan)
+
+        return self.runtime.run_phase(
+            task, execute, tile_costs=costs,
+            assignment=self.runtime.pinned_assignment(costs),
+            extra_switches=switches, extra_reissued=reissued)
+
+    def _serial(self, name: str, cost: float, fn=None):
         # driver phases execute on the host co-located with rank 0
-        return model_serial_phase(self.scheduler, self.power, self.profile,
-                                  name, cost, host_time_s, device=0)
+        return self.runtime.run_serial(name, cost, fn=fn, device=0)
 
     # ------------------------------------------------------------------
     def _apply_faults(self, k: int, faults: Optional[FaultPlan],
@@ -299,10 +323,32 @@ class ShardedMiner:
                 f"{want[bad]} single-device")
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _round_view(rec, plan: ShardPlan, k: int, n_candidates: int,
+                    n_frequent: int, dead: List[int],
+                    serial=None, m_padded: int = 0) -> RoundReport:
+        """Per-round view with shard-plan tile semantics: "tiles" are row
+        blocks (Σ blocks == n_tiles invariant), not the per-rank slabs the
+        pinned assignment schedules."""
+        return RoundReport(
+            k=k, n_candidates=n_candidates, n_frequent=n_frequent,
+            n_tiles=plan.n_blocks,
+            tiles_per_device=[int(b) for b in plan.rows // plan.row_block],
+            map_makespan_s=rec.sim_time_s, map_busy_s=list(rec.busy_s),
+            switches=rec.switches, reissued=rec.reissued,
+            energy_j=rec.energy_j, serial=serial, m_padded=m_padded,
+            failed_devices=dead)
+
     def run(self, baskets: Baskets,
             faults: Optional[FaultPlan] = None) -> PipelineResult:
         cfg = self.config
+        rt = self.runtime
         t_start = time.perf_counter()
+        # a run that raised mid-way (invariant check, scoring error) leaves
+        # orphaned records; this plane owns its runtime, so anything still
+        # live belongs to no report — drop it before marking
+        rt.ledger.take_since(0)
+        mark = rt.ledger.mark()
 
         T, n_items_raw, n_tx_raw = ingest_baskets(baskets)
         n_tx, n_items = T.shape                    # lane-padded (internal)
@@ -315,7 +361,7 @@ class ShardedMiner:
         data = jnp.asarray(shard_bitmap(T, plan))
 
         report = PipelineReport(
-            backend=self.backend, policy=self.scheduler.policy,
+            backend=self.backend, policy=rt.policy.name, split=rt.split,
             profile_speeds=[float(s) for s in self.profile.speeds],
             n_tx=n_tx_raw, n_items=n_items_raw,
             n_tiles=plan.n_blocks, min_support=min_sup,
@@ -328,10 +374,9 @@ class ShardedMiner:
             1, faults, alive, plan, T, report)
         if new_data is not None:
             data = new_data
-        counts_dev, rep = run_sharded(
-            self._item_job(n_items), data, self.mesh, self.axis,
-            profile=self.profile, power=self.power,
-            shard_costs=plan.shard_costs(n_items), switches=sw + re)
+        counts_dev, rec = self._sharded_round(
+            self._item_job(n_items), data, plan, n_items,
+            switches=sw, reissued=re)
         counts = np.asarray(counts_dev, dtype=np.int64)
         if self.verify_rounds:
             self._check_round(1, T, None, counts)
@@ -339,13 +384,9 @@ class ShardedMiner:
             counts[:n_items_raw] >= min_sup)[0]]
         for (i,) in frequent:
             supports[(i,)] = int(counts[i])
-        report.rounds.append(RoundReport(
-            k=1, n_candidates=n_items_raw, n_frequent=len(frequent),
-            n_tiles=plan.n_blocks,
-            tiles_per_device=[int(b) for b in plan.rows // plan.row_block],
-            map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
-            switches=sw, reissued=re,
-            energy_j=rep.energy_j or 0.0, failed_devices=dead))
+        report.rounds.append(self._round_view(
+            rec, plan, k=1, n_candidates=n_items_raw,
+            n_frequent=len(frequent), dead=dead))
 
         # ---- rounds k>=2: serial candidate-gen + sharded counting -----
         k = 2
@@ -354,30 +395,30 @@ class ShardedMiner:
                 k, faults, alive, plan, T, report)
             if new_data is not None:
                 data = new_data
-            t0 = time.perf_counter()
-            cands = generate_candidates(frequent)
-            host_t = time.perf_counter() - t0
-            serial = self._serial(
+            cands, serial = self._serial(
                 f"mba-candgen-k{k}",
                 cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
-                host_time_s=host_t)
+                fn=lambda fr=frequent: generate_candidates(fr))
             if not cands:
-                report.rounds.append(RoundReport(
-                    k=k, n_candidates=0, n_frequent=0, n_tiles=0,
-                    tiles_per_device=[0] * n,
-                    map_makespan_s=0.0, map_busy_s=[0.0] * n,
-                    switches=sw, reissued=re, energy_j=0.0, serial=serial,
-                    failed_devices=dead))
+                # a replan consumed this round but no map phase will run to
+                # carry its moves: charge them (counts AND joules) to the
+                # serial record so the ledger still accounts every
+                # migration exactly once
+                rt.charge_moves(serial, sw, re)
+                view = RoundReport.from_phases(
+                    k=k, n_candidates=0, n_frequent=0, map_phase=None,
+                    serial=serial, n_devices=n)
+                view.switches, view.reissued = sw, re
+                view.failed_devices = dead
+                report.rounds.append(view)
                 break
 
             C = pad_candidates(itemsets_to_bitmap(cands, n_items),
                                cfg.m_bucket)
             Cj = jnp.asarray(C)
-            sup_dev, rep = run_sharded(
-                self._support_job(C.shape[0]), data, self.mesh, self.axis,
-                extra_args=(Cj,),
-                profile=self.profile, power=self.power,
-                shard_costs=plan.shard_costs(n_items), switches=sw + re)
+            sup_dev, rec = self._sharded_round(
+                self._support_job(C.shape[0]), data, plan, n_items,
+                extra_args=(Cj,), switches=sw, reissued=re)
             # padded candidate rows are all-zero masks and would match every
             # transaction — slice to the true count, never trust padding
             sup = np.asarray(sup_dev, dtype=np.int64)[:len(cands)]
@@ -388,29 +429,24 @@ class ShardedMiner:
                 if s >= min_sup:
                     supports[c] = int(s)
                     frequent.append(c)
-            report.rounds.append(RoundReport(
-                k=k, n_candidates=len(cands), n_frequent=len(frequent),
-                n_tiles=plan.n_blocks,
-                tiles_per_device=[int(b) for b in plan.rows // plan.row_block],
-                map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
-                switches=sw, reissued=re, energy_j=rep.energy_j or 0.0,
-                serial=serial, m_padded=int(C.shape[0]),
-                failed_devices=dead))
+            report.rounds.append(self._round_view(
+                rec, plan, k=k, n_candidates=len(cands),
+                n_frequent=len(frequent), dead=dead, serial=serial,
+                m_padded=int(C.shape[0])))
             k += 1
 
         # ---- step 3: association rules (driver, rank 0) ---------------
-        t0 = time.perf_counter()
-        rules = generate_rules(
-            AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
-            cfg.min_confidence, min_lift=cfg.min_lift)
-        host_t = time.perf_counter() - t0
-        report.rules_phase = self._serial(
+        rules, rules_rec = self._serial(
             "mba-rules",
             cost=max(1.0, len(supports) * cfg.serial_unit_cost),
-            host_time_s=host_t)
+            fn=lambda: generate_rules(
+                AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
+                cfg.min_confidence, min_lift=cfg.min_lift))
+        report.rules_phase = rules_rec
 
         report.n_itemsets = len(supports)
         report.n_rules = len(rules)
         report.wall_time_s = time.perf_counter() - t_start
+        report.ledger = rt.ledger.take_since(mark)
         return PipelineResult(supports=supports, rules=rules, report=report,
                               n_tx=n_tx_raw)

@@ -3,13 +3,21 @@ database through :class:`repro.pipeline.MarketBasketPipeline` (MapReduce
 Apriori under the MB Scheduler on a heterogeneous core profile).
 
   PYTHONPATH=src python -m repro.launch.mine --n-tx 8192 --n-items 128 \
-      --min-support 0.02 --min-confidence 0.6 --profile paper --policy lpt
+      --min-support 0.02 --min-confidence 0.6 --profile paper \
+      --policy dynamic --split lpt
+
+`--policy` selects the switching policy (paper §VI): ``static`` plans each
+phase once, ``dynamic`` closes the loop (EWMA speed feedback, straggler
+speculation), ``costmodel`` seeds tile costs from roofline estimates.
+`--split` selects the tile split (``lpt`` | ``proportional`` | ``equal``).
 
 `--sharded` executes the distributed mining plane instead (shard_map over a
 device mesh; run with XLA_FLAGS=--xla_force_host_platform_device_count=8
 for a simulated 8-rank CPU mesh), and `--smoke` additionally runs the
 single-device pipeline on the same data and asserts bit-identical itemsets
-and rules — the CI multi-device end-to-end check.
+and rules — the CI multi-device end-to-end check (run under both
+``--policy static`` and ``--policy dynamic``: results must not depend on
+the switching policy).
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import os
 from repro.core.hetero import HeterogeneityProfile
 from repro.data.baskets import BasketConfig, generate_baskets
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
+from repro.runtime import POLICY_NAMES
 
 
 PROFILES = {
@@ -30,16 +39,16 @@ PROFILES = {
 
 def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          min_confidence: float = 0.6, profile_name: str = "paper",
-         policy: str = "lpt", n_tiles: int = 32, data_plane: str = "auto",
+         split: str = "lpt", n_tiles: int = 32, data_plane: str = "auto",
          seed: int = 0, top: int = 15, sharded: bool = False,
-         n_shards: int = 0, smoke: bool = False):
+         n_shards: int = 0, smoke: bool = False, policy: str = "static"):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 2048), min(n_items, 64)
 
     T = generate_baskets(BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed))
     config = PipelineConfig(min_support=min_support,
                             min_confidence=min_confidence,
-                            n_tiles=n_tiles, policy=policy,
+                            n_tiles=n_tiles, policy=policy, split=split,
                             data_plane=data_plane)
 
     if sharded:
@@ -49,14 +58,15 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
         n = mesh.shape[mesh.axis_names[0]]
         profile = mesh_profile(n, PROFILES[profile_name]())
         print(f"[mine] sharded mesh={n} ranks "
-              f"speeds={profile.speeds.tolist()} policy={policy}")
+              f"speeds={profile.speeds.tolist()} policy={policy} "
+              f"split={split}")
         miner = ShardedMiner(mesh=mesh, profile=profile, config=config,
                              verify_rounds=smoke)
         result = miner.run(T)
     else:
         profile = PROFILES[profile_name]()
         print(f"[mine] profile={profile_name} speeds={profile.speeds.tolist()} "
-              f"policy={policy}")
+              f"policy={policy} split={split}")
         result = MarketBasketPipeline(profile, config).run(T)
 
     print(result.report.summary())
@@ -66,6 +76,8 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
 
     if smoke and sharded:
         # end-to-end cross-plane check: sharded == single-device, bit for bit
+        # (and independent of the switching policy — scheduling must never
+        # change what gets mined, only when/where it runs)
         single = MarketBasketPipeline(PROFILES[profile_name](),
                                       config).run(T)
         assert result.supports == single.supports, \
@@ -74,7 +86,7 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
             "sharded vs single-device rule mismatch"
         print(f"[mine] smoke OK: sharded == single-device "
               f"({len(result.supports)} itemsets, {len(result.rules)} rules, "
-              f"{result.report.n_shards} ranks)")
+              f"{result.report.n_shards} ranks, policy={policy})")
     return result
 
 
@@ -85,8 +97,13 @@ def main():
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--min-confidence", type=float, default=0.6)
     ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
-    ap.add_argument("--policy", default="lpt",
-                    choices=["lpt", "proportional", "equal"])
+    ap.add_argument("--policy", default="static", choices=list(POLICY_NAMES),
+                    help="switching policy: plan once (static), closed-loop "
+                         "EWMA + speculation (dynamic), roofline-seeded "
+                         "costs (costmodel)")
+    ap.add_argument("--split", default="lpt",
+                    choices=["lpt", "proportional", "equal"],
+                    help="tile split strategy across the core profile")
     ap.add_argument("--n-tiles", type=int, default=32)
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
@@ -105,8 +122,9 @@ def main():
         # chain above triggers, so setting it here still takes effect
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     mine(args.n_tx, args.n_items, args.min_support, args.min_confidence,
-         args.profile, args.policy, args.n_tiles, args.data_plane, args.seed,
-         sharded=args.sharded, n_shards=args.n_shards, smoke=args.smoke)
+         args.profile, args.split, args.n_tiles, args.data_plane, args.seed,
+         sharded=args.sharded, n_shards=args.n_shards, smoke=args.smoke,
+         policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -41,11 +41,11 @@ def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
 
 def recommend(n_tx: int = 8192, n_items: int = 128,
               min_support: float = 0.02, min_confidence: float = 0.6,
-              profile_name: str = "paper", policy: str = "lpt",
+              profile_name: str = "paper", split: str = "lpt",
               data_plane: str = "auto", n_queries: int = 2048, k: int = 5,
               batch: int = 64, cache_size: int = 4096, seed: int = 0,
               mean_gap_s: float = 0.0, index_dir: str = "",
-              smoke: bool = False, top: int = 8):
+              smoke: bool = False, top: int = 8, policy: str = "static"):
     profile = PROFILES[profile_name]()
     basket_cfg = BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed)
 
@@ -53,7 +53,7 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
     pipe = MarketBasketPipeline(
         profile,
         PipelineConfig(min_support=min_support, min_confidence=min_confidence,
-                       policy=policy, data_plane=data_plane))
+                       policy=policy, split=split, data_plane=data_plane))
     result = pipe.run(generate_baskets(basket_cfg))
     print(f"[recommend] mined {len(result.rules)} rules from {n_tx} tx "
           f"({result.report.n_rounds} rounds, backend="
@@ -72,7 +72,7 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
     engine = RecommendationEngine(
         index, profile,
         ServingConfig(k=k, batch_buckets=buckets, data_plane=data_plane,
-                      cache_size=cache_size, policy=policy))
+                      cache_size=cache_size, policy=policy, split=split))
     queries, arrival = synthetic_trace(basket_cfg, n_queries, seed + 101,
                                        mean_gap_s)
     results, report = engine.serve(queries, arrival)
@@ -113,8 +113,12 @@ def main():
     ap.add_argument("--min-support", type=float, default=0.02)
     ap.add_argument("--min-confidence", type=float, default=0.6)
     ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
-    ap.add_argument("--policy", default="lpt",
-                    choices=["lpt", "proportional", "equal"])
+    ap.add_argument("--policy", default="static",
+                    choices=["static", "dynamic", "costmodel"],
+                    help="switching policy for mining and serving phases")
+    ap.add_argument("--split", default="lpt",
+                    choices=["lpt", "proportional", "equal"],
+                    help="tile split strategy across the core profile")
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
     ap.add_argument("--queries", type=int, default=2048)
@@ -135,9 +139,9 @@ def main():
         args.n_tx, args.n_items, args.queries = 2048, 64, 1000
         args.min_support = max(args.min_support, 0.03)
     recommend(args.n_tx, args.n_items, args.min_support, args.min_confidence,
-              args.profile, args.policy, args.data_plane, args.queries,
+              args.profile, args.split, args.data_plane, args.queries,
               args.k, args.batch, args.cache_size, args.seed, args.mean_gap_s,
-              args.index_dir, args.smoke)
+              args.index_dir, args.smoke, policy=args.policy)
 
 
 if __name__ == "__main__":

@@ -5,9 +5,9 @@ Composition (paper §V):
   baskets ──pack──▶ bitmap T[n_tx, n_items]
      │
      ├─ round k=1: item-frequency MapReduceJob (tiled over the profile)
-     ├─ round k≥2: serial candidate generation  → MBScheduler.assign_serial
+     ├─ round k≥2: serial candidate generation  → Runtime.run_serial
      │             (one core runs, the rest are power-gated)
-     │             tiled support counting       → MBScheduler.assign_parallel
+     │             tiled support counting       → Runtime.run_phase
      │             (DataPlane: Pallas kernel on TPU, jitted ref elsewhere)
      ├─ rules: confidence/lift pruning, serial phase on the fastest core
      ▼
@@ -15,14 +15,17 @@ Composition (paper §V):
 
 The control plane (candidate generation, rule enumeration) is host Python
 — the paper's "single-threaded tasks"; its scheduling/energy is *modeled*
-through the same MBScheduler/PowerModel the map phases use, so a run's
-report answers the paper's questions: where did the time go, what did
-gating save, what did core switching cost.
+through the shared :class:`repro.runtime.Runtime`, which owns the
+MBScheduler + PowerModel + phase ledger and performs assignment, policy
+feedback and accounting exactly once per phase.  The switching policy
+(``static`` | ``dynamic`` | ``costmodel``) is a config knob; execution
+stays in :class:`SimulatedCluster`, which honors whatever assignment the
+policy planned.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -32,15 +35,14 @@ import jax.numpy as jnp
 from repro.core.hetero import HeterogeneityProfile
 from repro.core.itemsets import (AprioriResult, frequent_itemsets,
                                  generate_candidates, itemsets_to_bitmap)
-from repro.core.mapreduce import (ExecReport, FailureEvent, MapReduceJob,
-                                  SimulatedCluster)
+from repro.core.mapreduce import FailureEvent, MapReduceJob, SimulatedCluster
 from repro.core.power import PowerModel
-from repro.core.rules import Rule, generate_rules
 from repro.core.scheduler import MBScheduler, TaskSpec
+from repro.core.rules import Rule, generate_rules
 from repro.data.baskets import pack_transactions, pad_items
 from repro.pipeline.dataplane import DataPlane, uniform_tiles
-from repro.pipeline.report import (PipelineReport, RoundReport, SerialPhase,
-                                   busy_list)
+from repro.pipeline.report import PipelineReport, RoundReport
+from repro.runtime import MeasuredPhase, Runtime, SwitchingPolicy
 
 Baskets = Union[np.ndarray, Sequence[Sequence[int]]]
 
@@ -67,29 +69,6 @@ def ingest_baskets(baskets: Baskets) -> Tuple[np.ndarray, int, int]:
     return pad_items(T), T.shape[1], T.shape[0]
 
 
-def model_serial_phase(scheduler: MBScheduler, power: Optional[PowerModel],
-                       profile: HeterogeneityProfile, name: str, cost: float,
-                       host_time_s: float,
-                       device: Optional[int] = None) -> SerialPhase:
-    """Model a single-threaded phase: one core runs, the rest gate off.
-
-    `device` pins the core (the sharded plane routes driver phases to rank
-    0); otherwise `assign_serial` picks the most capable one.
-    """
-    asg = scheduler.assign_serial(TaskSpec(name, cost, parallel=False),
-                                  device=device)
-    dev = asg.serial_device
-    sim_t = float(asg.est_finish[dev])
-    energy = 0.0
-    if power is not None:
-        busy = np.zeros(profile.n)
-        busy[dev] = sim_t
-        energy = power.energy(busy, sim_t, gated=asg.gated)
-    return SerialPhase(name=name, device=dev, cost=cost, sim_time_s=sim_t,
-                       host_time_s=host_time_s, energy_j=energy,
-                       gated=list(asg.gated))
-
-
 @dataclass(frozen=True)
 class PipelineConfig:
     """Knobs for one mining run.  min_support <= 1 is a fraction of n_tx
@@ -101,7 +80,8 @@ class PipelineConfig:
     min_lift: float = 0.0
     max_k: int = 0                  # 0 = mine until no candidates survive
     n_tiles: int = 32
-    policy: str = "lpt"             # equal | proportional | lpt
+    policy: str = "static"          # switching: static | dynamic | costmodel
+    split: str = "lpt"              # tile split: equal | proportional | lpt
     data_plane: str = "auto"        # auto | pallas | ref
     m_bucket: int = 128             # candidate-batch rounding (kernel lanes)
     interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
@@ -136,23 +116,20 @@ class MarketBasketPipeline:
     def __init__(self, profile: Optional[HeterogeneityProfile] = None,
                  config: Optional[PipelineConfig] = None,
                  scheduler: Optional[MBScheduler] = None,
-                 power: Optional[PowerModel] = None):
+                 power: Optional[PowerModel] = None,
+                 policy: Union[str, SwitchingPolicy, None] = None):
         self.profile = profile or HeterogeneityProfile.paper()
         self.config = config or PipelineConfig()
-        self.scheduler = scheduler or MBScheduler(self.profile,
-                                                  policy=self.config.policy)
-        if power is not None:
-            self.power = power
-        elif self.config.power == "cpu":
-            self.power = PowerModel.cpu(self.profile)
-        elif self.config.power == "tpu_v5e":
-            self.power = PowerModel.tpu_v5e(self.profile.n)
-        elif self.config.power == "none":
-            self.power = None
-        else:
-            raise ValueError(f"unknown power model {self.config.power!r}")
+        self.runtime = Runtime(
+            self.profile,
+            policy=policy if policy is not None else self.config.policy,
+            split=self.config.split,
+            power=power if power is not None else self.config.power,
+            scheduler=scheduler)
+        self.scheduler = self.runtime.scheduler
+        self.power = self.runtime.power
         self.cluster = SimulatedCluster(self.profile, self.scheduler,
-                                        power=None)  # energy computed here
+                                        power=None)  # ledger prices energy
         self.data_plane = DataPlane(self.config.data_plane,
                                     m_bucket=self.config.m_bucket,
                                     interpret=self.config.interpret)
@@ -164,41 +141,43 @@ class MarketBasketPipeline:
         """Returns (lane-padded bitmap, raw item count, raw tx count)."""
         return ingest_baskets(baskets)
 
-    def _serial_phase(self, name: str, cost: float,
-                      host_time_s: float) -> SerialPhase:
-        """Model a single-threaded phase: best core runs, the rest gate off."""
-        return model_serial_phase(self.scheduler, self.power, self.profile,
-                                  name, cost, host_time_s)
+    def _map_round(self, job: MapReduceJob, tiles: List,
+                   failures: Optional[List[FailureEvent]],
+                   tile_flops: Optional[np.ndarray] = None):
+        """One tiled map phase through the shared runtime: the policy plans
+        the assignment, the simulated cluster executes it, the runtime does
+        the time/energy/switch accounting exactly once."""
+        tile_costs = np.array([job.tile_cost(t) for t in tiles],
+                              dtype=np.float64)
+        # one family: every round maps the same device-resident tiles, so
+        # dynamic switching tracks owner drift across rounds
+        task = TaskSpec(job.name, float(tile_costs.sum()), parallel=True,
+                        n_tiles=len(tiles), family="mba-map")
 
-    def _map_round(self, job: MapReduceJob, tiles: List[np.ndarray],
-                   failures: Optional[List[FailureEvent]]
-                   ) -> Tuple[np.ndarray, ExecReport, float, int]:
-        result, rep = self.cluster.run(job, tiles, failures=failures,
-                                       speculate=self.config.speculate)
-        switches = rep.switches            # per-run: this round's moves only
-        energy = 0.0
-        if self.power is not None:
-            # gate by what actually ran, not the planned assignment: after a
-            # failure re-plan a planned-empty core may have executed orphans
-            # (must be billed active) and a dead core ran nothing (gated)
-            gated = [d for d in range(self.profile.n)
-                     if rep.busy_s[d] == 0.0]
-            energy = self.power.energy(rep.busy_s, rep.makespan, gated=gated,
-                                       switches=switches)
-            # a core that died mid-round worked (active) then powered off:
-            # convert its post-death idle tail to gated watts
-            for d in rep.failed_devices:
-                if rep.busy_s[d] > 0.0:
-                    tail = max(rep.makespan - rep.busy_s[d], 0.0)
-                    energy += (self.power.p_gated[d]
-                               - self.power.p_idle[d]) * tail
-        return result, rep, energy, switches
+        def execute(asg, _costs):
+            result, rep = self.cluster.run(job, tiles, failures=failures,
+                                           speculate=self.config.speculate,
+                                           assignment=asg)
+            return MeasuredPhase(result=result, busy_s=rep.busy_s,
+                                 makespan=rep.makespan,
+                                 switches=rep.switches, reissued=rep.reissued,
+                                 failed_devices=list(rep.failed_devices),
+                                 tiles_done=rep.tiles_done)
+
+        return self.runtime.run_phase(task, execute, tile_costs=tile_costs,
+                                      tile_flops=tile_flops)
 
     # ------------------------------------------------------------------
     def run(self, baskets: Baskets,
             failures: Optional[List[FailureEvent]] = None) -> PipelineResult:
         cfg = self.config
+        rt = self.runtime
         t_start = time.perf_counter()
+        # a run that raised mid-way (invariant check, scoring error) leaves
+        # orphaned records; this plane owns its runtime, so anything still
+        # live belongs to no report — drop it before marking
+        rt.ledger.take_since(0)
+        mark = rt.ledger.mark()
 
         T, n_items_raw, n_tx_raw = self._ingest(baskets)
         n_tx, n_items = T.shape                     # lane-padded (internal)
@@ -206,9 +185,11 @@ class MarketBasketPipeline:
         # device-resident once: every round's map phase reuses these tiles,
         # so uploading per round would redo the same host->device transfers
         tiles = [jnp.asarray(t) for t in uniform_tiles(T, cfg.n_tiles)]
+        tile_rows = np.array([t.shape[0] for t in tiles], dtype=np.float64)
 
         report = PipelineReport(
-            backend=self.data_plane.backend, policy=self.scheduler.policy,
+            backend=self.data_plane.backend, policy=rt.policy.name,
+            split=rt.split,
             profile_speeds=[float(s) for s in self.profile.speeds],
             n_tx=n_tx_raw, n_items=n_items_raw,
             n_tiles=len(tiles), min_support=min_sup)
@@ -223,34 +204,26 @@ class MarketBasketPipeline:
             combine_fn=lambda a, b: a + b,
             zero_fn=lambda: np.zeros(n_items, dtype=np.int64),
         )
-        counts, rep, energy, switches = self._map_round(job1, tiles, failures)
+        counts, rec = self._map_round(job1, tiles, failures,
+                                      tile_flops=tile_rows * n_items)
         frequent = [(int(i),) for i in np.nonzero(counts >= min_sup)[0]]
         for (i,) in frequent:
             supports[(i,)] = int(counts[i])
-        report.rounds.append(RoundReport(
+        report.rounds.append(RoundReport.from_phases(
             k=1, n_candidates=n_items_raw, n_frequent=len(frequent),
-            n_tiles=len(tiles),
-            tiles_per_device=_tile_histogram(rep),
-            map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
-            switches=switches, reissued=rep.reissued, energy_j=energy,
-            failed_devices=list(rep.failed_devices)))
+            map_phase=rec))
 
         # ---- rounds k>=2: serial candidate-gen + tiled counting -------
         k = 2
         while frequent and (cfg.max_k == 0 or k <= cfg.max_k):
-            t0 = time.perf_counter()
-            cands = generate_candidates(frequent)
-            host_t = time.perf_counter() - t0
-            serial = self._serial_phase(
+            cands, serial = rt.run_serial(
                 f"mba-candgen-k{k}",
                 cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
-                host_time_s=host_t)
+                fn=lambda fr=frequent: generate_candidates(fr))
             if not cands:
-                report.rounds.append(RoundReport(
-                    k=k, n_candidates=0, n_frequent=0, n_tiles=0,
-                    tiles_per_device=[0] * self.profile.n,
-                    map_makespan_s=0.0, map_busy_s=[0.0] * self.profile.n,
-                    switches=0, reissued=0, energy_j=0.0, serial=serial))
+                report.rounds.append(RoundReport.from_phases(
+                    k=k, n_candidates=0, n_frequent=0, map_phase=None,
+                    serial=serial, n_devices=self.profile.n))
                 break
 
             self.data_plane.prepare(itemsets_to_bitmap(cands, n_items))
@@ -260,42 +233,34 @@ class MarketBasketPipeline:
                 combine_fn=lambda a, b: a + b,
                 zero_fn=lambda m=len(cands): np.zeros(m, dtype=np.int64),
             )
-            sup, rep, energy, switches = self._map_round(job, tiles, failures)
+            # roofline seed for the costmodel policy: the kernel's MXU work
+            # is 2·rows·items·candidates per tile (bytes are rows·items)
+            m_padded = self.data_plane.m_padded
+            sup, rec = self._map_round(
+                job, tiles, failures,
+                tile_flops=2.0 * tile_rows * n_items * m_padded)
             frequent = []
             for c, s in zip(cands, sup):
                 if s >= min_sup:
                     supports[c] = int(s)
                     frequent.append(c)
-            report.rounds.append(RoundReport(
+            report.rounds.append(RoundReport.from_phases(
                 k=k, n_candidates=len(cands), n_frequent=len(frequent),
-                n_tiles=len(tiles),
-                tiles_per_device=_tile_histogram(rep),
-                map_makespan_s=rep.makespan, map_busy_s=busy_list(rep.busy_s),
-                switches=switches, reissued=rep.reissued, energy_j=energy,
-                serial=serial, m_padded=self.data_plane.m_padded,
-                failed_devices=list(rep.failed_devices)))
+                map_phase=rec, serial=serial, m_padded=m_padded))
             k += 1
 
         # ---- step 3: association rules (serial control plane) ---------
-        t0 = time.perf_counter()
-        rules = generate_rules(
-            AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
-            cfg.min_confidence, min_lift=cfg.min_lift)
-        host_t = time.perf_counter() - t0
-        report.rules_phase = self._serial_phase(
+        rules, rules_rec = rt.run_serial(
             "mba-rules",
             cost=max(1.0, len(supports) * cfg.serial_unit_cost),
-            host_time_s=host_t)
+            fn=lambda: generate_rules(
+                AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
+                cfg.min_confidence, min_lift=cfg.min_lift))
+        report.rules_phase = rules_rec
 
         report.n_itemsets = len(supports)
         report.n_rules = len(rules)
         report.wall_time_s = time.perf_counter() - t_start
+        report.ledger = rt.ledger.take_since(mark)
         return PipelineResult(supports=supports, rules=rules, report=report,
                               n_tx=n_tx_raw)
-
-
-def _tile_histogram(rep: ExecReport) -> List[int]:
-    """Tiles *executed* per device (orphans counted at the survivor that
-    re-ran them after a failure).  Σ == n_tiles always."""
-    assert rep.tiles_done is not None, "SimulatedCluster always sets this"
-    return list(rep.tiles_done)

@@ -1,37 +1,33 @@
 """Structured accounting for one end-to-end pipeline run.
 
 Every pipeline phase produces a record here; nothing is printed as a side
-effect.  The report is the object benchmarks, tests and future scaling PRs
-consume — per-round makespan/energy, core switches, speculative re-issues,
-and the data-plane batch shapes (which reveal jit-cache reuse across
-levels: rounds sharing one ``m_padded`` share one compiled kernel).
+effect.  Since the unified-runtime refactor, every phase is a
+:class:`repro.runtime.PhaseRecord` emitted by ``Runtime.run_phase`` /
+``run_serial``, and the report's totals are derived from the attached
+:class:`repro.runtime.ExecLedger` slice — the same ledger semantics the
+serving and sharded planes use, so the planes cannot drift on what a
+second or a joule means.  ``RoundReport`` remains the per-Apriori-level
+view (candidate counts, tile histograms, kernel batch shapes) assembled
+from those records.
 
 Time/energy semantics: ``serial`` phases run on one core chosen by
 ``MBScheduler.assign_serial`` with every other core power-gated; ``map``
 phases are tiled across the heterogeneity profile, and their energy charges
 active watts for busy seconds, idle watts for the tail each core waits on
-the makespan, gated watts for cores the scheduler left empty, plus the
-per-switch joule cost of dynamic core switching.
+the makespan, gated watts for cores that ran nothing, plus the per-move
+joule cost of dynamic core switching (switches and speculative re-issues
+both migrate work, so both are priced).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import List, Optional
 
-import numpy as np
+from repro.runtime.ledger import ExecLedger, PhaseRecord
 
-
-@dataclass
-class SerialPhase:
-    """A single-threaded phase routed to one core (paper §V function 3)."""
-
-    name: str
-    device: int                 # core the scheduler picked
-    cost: float                 # work units (scheduler's estimate)
-    sim_time_s: float           # cost / speed[device]
-    host_time_s: float          # measured wall time on this host
-    energy_j: float             # chosen core active, all others gated
-    gated: List[int] = field(default_factory=list)
+# A single-threaded phase routed to one core (paper §V function 3) is just
+# a serial PhaseRecord; the old name stays exported for callers/tests.
+SerialPhase = PhaseRecord
 
 
 @dataclass
@@ -48,7 +44,7 @@ class RoundReport:
     switches: int
     reissued: int
     energy_j: float
-    serial: Optional[SerialPhase] = None    # None for k=1 (no candidate gen)
+    serial: Optional[PhaseRecord] = None    # None for k=1 (no candidate gen)
     m_padded: int = 0             # data-plane candidate batch (0 = host path)
     failed_devices: List[int] = field(default_factory=list)
 
@@ -56,23 +52,47 @@ class RoundReport:
     def time_s(self) -> float:
         return self.map_makespan_s + (self.serial.sim_time_s if self.serial else 0.0)
 
+    @classmethod
+    def from_phases(cls, k: int, n_candidates: int, n_frequent: int,
+                    map_phase: Optional[PhaseRecord],
+                    serial: Optional[PhaseRecord] = None,
+                    m_padded: int = 0, n_devices: int = 0) -> "RoundReport":
+        """Assemble the per-round view from the runtime's phase records."""
+        if map_phase is None:                # candidate generation came up dry
+            return cls(k=k, n_candidates=n_candidates, n_frequent=n_frequent,
+                       n_tiles=0, tiles_per_device=[0] * n_devices,
+                       map_makespan_s=0.0, map_busy_s=[0.0] * n_devices,
+                       switches=0, reissued=0, energy_j=0.0, serial=serial,
+                       m_padded=m_padded)
+        return cls(k=k, n_candidates=n_candidates, n_frequent=n_frequent,
+                   n_tiles=map_phase.n_tiles,
+                   tiles_per_device=list(map_phase.tiles_done),
+                   map_makespan_s=map_phase.sim_time_s,
+                   map_busy_s=list(map_phase.busy_s),
+                   switches=map_phase.switches, reissued=map_phase.reissued,
+                   energy_j=map_phase.energy_j, serial=serial,
+                   m_padded=m_padded,
+                   failed_devices=list(map_phase.failed_devices))
+
 
 @dataclass
 class PipelineReport:
-    """The full run: config echo, per-round records, and totals."""
+    """The full run: config echo, per-round records, and ledger totals."""
 
     backend: str                  # "pallas" | "ref"
-    policy: str
+    policy: str                   # switching policy: static|dynamic|costmodel
     profile_speeds: List[float]
     n_tx: int
     n_items: int
     n_tiles: int
     min_support: int              # absolute, after fraction resolution
+    split: str = "lpt"            # tile split: lpt | proportional | equal
     rounds: List[RoundReport] = field(default_factory=list)
-    rules_phase: Optional[SerialPhase] = None
+    rules_phase: Optional[PhaseRecord] = None
     n_itemsets: int = 0
     n_rules: int = 0
     wall_time_s: float = 0.0      # host wall clock for the whole run
+    ledger: Optional[ExecLedger] = None   # this run's phase records
     # distributed mining plane (execution == "sharded"):
     execution: str = "simulated"  # "simulated" | "sharded"
     n_shards: int = 0             # mesh axis size (0 = single-device plane)
@@ -93,6 +113,8 @@ class PipelineReport:
 
     @property
     def total_time_s(self) -> float:
+        if self.ledger is not None:
+            return self.ledger.total_time_s
         t = sum(r.time_s for r in self.rounds)
         if self.rules_phase:
             t += self.rules_phase.sim_time_s
@@ -100,6 +122,8 @@ class PipelineReport:
 
     @property
     def total_energy_j(self) -> float:
+        if self.ledger is not None:
+            return self.ledger.total_energy_j
         e = sum(r.energy_j + (r.serial.energy_j if r.serial else 0.0)
                 for r in self.rounds)
         if self.rules_phase:
@@ -108,11 +132,23 @@ class PipelineReport:
 
     @property
     def total_switches(self) -> int:
+        if self.ledger is not None:
+            return self.ledger.total_switches
         return sum(r.switches for r in self.rounds)
 
     @property
     def total_reissued(self) -> int:
+        if self.ledger is not None:
+            return self.ledger.total_reissued
         return sum(r.reissued for r in self.rounds)
+
+    @property
+    def constraint_violations(self) -> int:
+        """Serial phases whose min_speed no core could satisfy (flagged by
+        assign_serial instead of silently falling back)."""
+        if self.ledger is None:
+            return 0
+        return len(self.ledger.constraint_violations())
 
     @property
     def kernel_batches(self) -> List[int]:
@@ -122,7 +158,8 @@ class PipelineReport:
     # ------------------------------------------------------------------
     def summary(self) -> str:
         lines = [
-            f"MarketBasketPipeline: backend={self.backend} policy={self.policy} "
+            f"MarketBasketPipeline: backend={self.backend} "
+            f"policy={self.policy} split={self.split} "
             f"cores={self.profile_speeds}",
         ]
         if self.execution == "sharded":
@@ -157,12 +194,11 @@ class PipelineReport:
             f"{self.total_switches} core switches, "
             f"{self.total_reissued} speculative re-issues | "
             f"wall {self.wall_time_s:.2f}s, kernel batches {self.kernel_batches}")
+        if self.constraint_violations:
+            lines.append(f"  WARNING: {self.constraint_violations} serial "
+                         f"phase(s) ran on a core below their min_speed")
         return "\n".join(lines)
 
     def tiles_invariant_ok(self) -> bool:
         """Every map round's per-device tile counts must sum to the job size."""
         return all(sum(r.tiles_per_device) == r.n_tiles for r in self.rounds)
-
-
-def busy_list(busy: np.ndarray) -> List[float]:
-    return [float(b) for b in np.asarray(busy, dtype=np.float64)]

@@ -1,0 +1,14 @@
+"""Shared scheduling runtime: one MBScheduler + PowerModel + phase ledger
+behind every execution plane, with pluggable static/dynamic/costmodel
+switching policies (paper §VI)."""
+from repro.runtime.ledger import ExecLedger, PhaseRecord
+from repro.runtime.policies import (POLICY_NAMES, CostModelPolicy,
+                                    DynamicPolicy, StaticPolicy,
+                                    SwitchingPolicy, resolve_policy)
+from repro.runtime.runtime import MeasuredPhase, Runtime, resolve_power
+
+__all__ = [
+    "POLICY_NAMES", "CostModelPolicy", "DynamicPolicy", "ExecLedger",
+    "MeasuredPhase", "PhaseRecord", "Runtime", "StaticPolicy",
+    "SwitchingPolicy", "resolve_policy", "resolve_power",
+]

@@ -1,0 +1,220 @@
+"""Switching policies — the paper §VI pivot, as a pluggable interface.
+
+"Switching between the cores can be made static or dynamic": a
+:class:`SwitchingPolicy` decides how each parallel phase is planned and
+what happens to the plan as measurements arrive.
+
+* :class:`StaticPolicy` — plan once per phase from the believed speed
+  profile and never revisit it (the paper's static mode).
+* :class:`DynamicPolicy` — the paper's dynamic mode, closed-loop: measured
+  per-device walls EWMA-update the believed speeds
+  (``HeterogeneityProfile.observe``), plan drift versus the previous
+  same-shape phase is charged as core switches (``MBScheduler.rebalance``
+  semantics), and a planned-progress checkpoint detects stragglers and
+  speculatively re-issues their tail tiles (``speculate`` +
+  ``apply_moves``) before execution commits.
+* :class:`CostModelPolicy` — seeds tile costs from roofline / HLO cost
+  estimates (``launch/roofline`` constants, ``launch/hlo_cost.analyze``)
+  instead of raw byte counts: a tile's planning cost is
+  ``max(flops / peak_flops, bytes / hbm_bw)``, renormalized to the byte
+  work-unit scale so time/energy stay on one axis.
+
+Policies are deliberately stateless about *execution*: they see the task,
+the costs, the assignment and the measurement, and talk only to the
+scheduler/profile the :class:`repro.runtime.Runtime` owns.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import numpy as np
+
+from repro.core.scheduler import Assignment, MBScheduler, TaskSpec
+
+
+class SwitchingPolicy:
+    """Interface: cost seeding, phase planning, post-phase feedback."""
+
+    name = "abstract"
+
+    # -- cost seeding ---------------------------------------------------
+    def tile_costs(self, runtime, task: TaskSpec, tile_costs: np.ndarray,
+                   tile_flops: Optional[np.ndarray] = None) -> np.ndarray:
+        """Planning costs per tile (default: the byte-flavored estimates)."""
+        return tile_costs
+
+    # -- planning -------------------------------------------------------
+    def plan(self, runtime, task: TaskSpec, tile_costs: np.ndarray
+             ) -> Tuple[Assignment, int, int]:
+        """Returns ``(assignment, switches, reissued)`` — planner moves
+        charged to this phase (0/0 for a static plan)."""
+        raise NotImplementedError
+
+    # -- measurement feedback -------------------------------------------
+    def feedback(self, runtime, task: TaskSpec, assignment: Assignment,
+                 tile_costs: np.ndarray, measured) -> None:
+        """Called once per phase with the :class:`MeasuredPhase`."""
+
+
+class StaticPolicy(SwitchingPolicy):
+    """Plan once per phase; no feedback loop (paper static mode)."""
+
+    name = "static"
+
+    def plan(self, runtime, task, tile_costs):
+        return runtime.scheduler.assign_parallel(task, tile_costs), 0, 0
+
+    def feedback(self, runtime, task, assignment, tile_costs, measured):
+        return None
+
+
+class DynamicPolicy(StaticPolicy):
+    """Closed-loop dynamic core switching (paper dynamic mode).
+
+    ``checkpoint_frac`` — the planned-progress instant (fraction of the
+    planned makespan) at which stragglers are tested; mid-phase (0.5) by
+    default, where fast cores under a skewed plan have already finished
+    (progress clipped at 1) while a straggler sits visibly below the
+    median.  ``straggler_threshold`` — a device lags when its planned
+    progress is below ``threshold × median`` (same contract as
+    ``MBScheduler.speculate``).
+    """
+
+    name = "dynamic"
+
+    def __init__(self, checkpoint_frac: float = 0.5,
+                 straggler_threshold: float = 0.7):
+        if not 0.0 < checkpoint_frac <= 1.0:
+            raise ValueError(f"checkpoint_frac must be in (0, 1]: "
+                             f"{checkpoint_frac}")
+        self.checkpoint_frac = checkpoint_frac
+        self.straggler_threshold = straggler_threshold
+        # last owner map per (task family, tile arity): tile ids are
+        # positional and recur within a family (mining rounds over one
+        # tiled bitmap, serving batches of one bucket), so drift between
+        # same-family phases is the paper's dynamic core switching,
+        # charged per move — unrelated phases that merely share a tile
+        # count are never compared
+        self._last_owner: Dict[Tuple[str, int], Dict[int, int]] = {}
+
+    def plan(self, runtime, task, tile_costs):
+        sched: MBScheduler = runtime.scheduler
+        asg = sched.assign_parallel(task, tile_costs)
+        n_tiles = task.n_tiles or 1
+        key = (task.family_key, n_tiles)
+
+        # rebalance accounting: EWMA-updated speeds moved tiles since the
+        # previous same-family phase -> each move is a core switch
+        switches = 0
+        prev = self._last_owner.get(key)
+        if prev is not None:
+            now = asg.owner_of()
+            switches = sum(1 for t, d in now.items() if prev.get(t, d) != d)
+            sched.switches += switches
+
+        # speculative re-issue at the planned-progress checkpoint
+        reissued = 0
+        if n_tiles > 1 and asg.makespan > 0:
+            t_cp = self.checkpoint_frac * asg.makespan
+            load = np.array([tile_costs[ts].sum() if ts else 0.0
+                             for ts in asg.tiles_of])
+            speeds = runtime.profile.speeds
+            progress = np.where(load > 0,
+                                np.minimum(1.0, t_cp * speeds
+                                           / np.maximum(load, 1e-30)),
+                                1.0)
+            moves = sched.speculate(asg, progress,
+                                    threshold=self.straggler_threshold)
+            if moves:
+                asg = sched.apply_moves(asg, moves, tile_costs)
+                reissued = len(moves)
+
+        self._last_owner[key] = asg.owner_of()
+        return asg, switches, reissued
+
+    def feedback(self, runtime, task, assignment, tile_costs, measured):
+        """EWMA speed update from measured per-device walls.
+
+        Only measurements that carry ``work_done`` feed the loop — modeled
+        busy seconds are ``load / believed_speed`` by construction and
+        carry no information about the true rates.
+        """
+        if measured.work_done is None or measured.busy_s is None:
+            return
+        busy = np.asarray(measured.busy_s, dtype=np.float64)
+        work = np.asarray(measured.work_done, dtype=np.float64)
+        for d in range(min(len(busy), runtime.profile.n)):
+            if busy[d] > 0 and work[d] > 0:
+                runtime.profile.observe(d, float(work[d]), float(busy[d]))
+
+
+class CostModelPolicy(StaticPolicy):
+    """Static planning over roofline-seeded tile costs.
+
+    Tile planning cost = ``max(flops / peak_flops, bytes / hbm_bw)``
+    seconds at peak, rescaled so the total equals the byte total (the
+    scheduler's speeds are byte-flavored work units per second).  Per-tile
+    flops come from the caller's ``tile_flops`` estimate; without one,
+    ``flops_per_byte`` (e.g. derived from a compiled module via
+    :meth:`from_hlo`) is applied uniformly — which degenerates to the
+    byte seeding, exactly as it should when no intensity skew is known.
+    """
+
+    name = "costmodel"
+
+    def __init__(self, peak_flops: Optional[float] = None,
+                 hbm_bw: Optional[float] = None,
+                 flops_per_byte: float = 0.0):
+        from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+        self.peak_flops = PEAK_FLOPS if peak_flops is None else peak_flops
+        self.hbm_bw = HBM_BW if hbm_bw is None else hbm_bw
+        self.flops_per_byte = flops_per_byte
+
+    @classmethod
+    def from_hlo(cls, hlo_text: str, **kwargs) -> "CostModelPolicy":
+        """Seed the default arithmetic intensity from a compiled module."""
+        from repro.launch.hlo_cost import analyze
+        cost = analyze(hlo_text)
+        fpb = cost.flops / max(cost.traffic_bytes, 1.0)
+        return cls(flops_per_byte=fpb, **kwargs)
+
+    def tile_costs(self, runtime, task, tile_costs, tile_flops=None):
+        bytes_ = np.asarray(tile_costs, dtype=np.float64)
+        total = float(bytes_.sum())
+        if total <= 0:
+            return bytes_
+        if tile_flops is None:
+            flops = bytes_ * self.flops_per_byte
+        else:
+            flops = np.asarray(tile_flops, dtype=np.float64)
+        roofline_s = np.maximum(flops / self.peak_flops,
+                                bytes_ / self.hbm_bw)
+        rs = float(roofline_s.sum())
+        if rs <= 0:
+            return bytes_
+        # renormalize to the byte work-unit scale: same total work,
+        # redistributed by roofline intensity
+        return roofline_s * (total / rs)
+
+
+_POLICIES = {
+    "static": StaticPolicy,
+    "dynamic": DynamicPolicy,
+    "costmodel": CostModelPolicy,
+}
+
+POLICY_NAMES = tuple(sorted(_POLICIES))
+
+
+def resolve_policy(policy: Union[str, SwitchingPolicy, None]
+                   ) -> SwitchingPolicy:
+    """Name or instance -> instance (None = static)."""
+    if policy is None:
+        return StaticPolicy()
+    if isinstance(policy, SwitchingPolicy):
+        return policy
+    cls = _POLICIES.get(policy)
+    if cls is None:
+        raise ValueError(f"unknown switching policy {policy!r} "
+                         f"(known: {', '.join(POLICY_NAMES)})")
+    return cls()

@@ -5,9 +5,9 @@ phases tiled over the heterogeneity profile, power charged for gating and
 core switches) applies unchanged to serving:
 
   requests ──admission queue──▶ fixed batch buckets (pad-to-bucket)
-     │            └─ serial dispatch phase  → MBScheduler.assign_serial
+     │            └─ serial dispatch phase  → Runtime.run_serial
      ├─ result cache probe (LRU on the canonical basket bitmap)
-     ├─ batched scoring of the misses       → MBScheduler.assign_parallel
+     ├─ batched scoring of the misses       → Runtime.run_phase
      │  (rule_match kernel: Pallas on TPU, jitted ref elsewhere)
      ▼
   per-request top-k + ServingReport (QPS, p50/p99, batch fill, cache,
@@ -19,6 +19,13 @@ XLA compiles one kernel per bucket, not one per traffic pattern.  The
 simulated clock advances by (admission serial time + scoring makespan) per
 batch, so queueing delay, batching gain and the scheduler policy all show
 up in the latency percentiles.
+
+Scheduling/accounting run on the shared :class:`repro.runtime.Runtime`:
+each batch is one serial admission phase plus one parallel scoring phase
+(every padded slot a schedulable tile), and the report's energy/switch
+totals are read off the ledger slice — the same semantics as the mining
+planes, including the spin-up rule that every core activated away from
+the admission core is a core switch.
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ from repro.core.power import PowerModel
 from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.kernels.rule_match.ops import rule_topk
 from repro.pipeline.dataplane import resolve_backend
+from repro.runtime import ExecLedger, MeasuredPhase, Runtime, SwitchingPolicy
 from repro.serving.cache import Recommendation, ResultCache, basket_key
 from repro.serving.index import RuleIndex
 
@@ -51,7 +59,8 @@ class ServingConfig:
     data_plane: str = "auto"        # auto | pallas | ref
     interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
     cache_size: int = 4096          # LRU entries; 0 disables caching
-    policy: str = "lpt"             # scheduler policy for the scoring phase
+    policy: str = "static"          # switching: static | dynamic | costmodel
+    split: str = "lpt"              # tile split for the scoring phase
     power: str = "cpu"              # cpu | tpu_v5e | none
     # Work-unit cost model (same byte-flavored units as the mining phases):
     # admission charges per batch slot, scoring per slot scaled by index
@@ -65,8 +74,9 @@ class ServingReport:
     """Accounting for one ``serve()`` call (the serving PipelineReport)."""
 
     backend: str
-    policy: str
+    policy: str                     # switching policy name
     k: int
+    split: str = "lpt"
     n_queries: int = 0
     n_batches: int = 0
     bucket_counts: Dict[int, int] = field(default_factory=dict)
@@ -81,6 +91,7 @@ class ServingReport:
     switches: int = 0
     index_rows: int = 0
     index_version: int = 0
+    ledger: Optional[ExecLedger] = None   # this call's phase records
 
     @property
     def qps(self) -> float:
@@ -102,8 +113,8 @@ class ServingReport:
                            sorted(self.bucket_counts.items()))
         return (
             f"RecommendationEngine: backend={self.backend} "
-            f"policy={self.policy} k={self.k} index_rows={self.index_rows} "
-            f"v{self.index_version}\n"
+            f"policy={self.policy} split={self.split} k={self.k} "
+            f"index_rows={self.index_rows} v{self.index_version}\n"
             f"  {self.n_queries} queries in {self.n_batches} batches "
             f"(buckets {buckets}, fill {self.batch_fill:.2f}) | cache "
             f"{self.cache_hits} hit / {self.cache_misses} miss "
@@ -121,7 +132,8 @@ class RecommendationEngine:
                  profile: Optional[HeterogeneityProfile] = None,
                  config: Optional[ServingConfig] = None,
                  scheduler: Optional[MBScheduler] = None,
-                 power: Optional[PowerModel] = None):
+                 power: Optional[PowerModel] = None,
+                 policy: Union[str, SwitchingPolicy, None] = None):
         self.config = config or ServingConfig()
         cfg = self.config
         if not cfg.batch_buckets or any(b <= 0 for b in cfg.batch_buckets):
@@ -132,18 +144,14 @@ class RecommendationEngine:
             raise ValueError(f"k={cfg.k} must be in [1, n_items="
                              f"{index.n_items}]")
         self.profile = profile or HeterogeneityProfile.paper()
-        self.scheduler = scheduler or MBScheduler(self.profile,
-                                                  policy=cfg.policy)
-        if power is not None:
-            self.power = power
-        elif cfg.power == "cpu":
-            self.power = PowerModel.cpu(self.profile)
-        elif cfg.power == "tpu_v5e":
-            self.power = PowerModel.tpu_v5e(self.profile.n)
-        elif cfg.power == "none":
-            self.power = None
-        else:
-            raise ValueError(f"unknown power model {cfg.power!r}")
+        self.runtime = Runtime(
+            self.profile,
+            policy=policy if policy is not None else cfg.policy,
+            split=cfg.split,
+            power=power if power is not None else cfg.power,
+            scheduler=scheduler)
+        self.scheduler = self.runtime.scheduler
+        self.power = self.runtime.power
         self.backend = resolve_backend(cfg.data_plane)
         self.cache = ResultCache(cfg.cache_size)
         self.index: RuleIndex = None  # set by refresh()
@@ -231,7 +239,13 @@ class RecommendationEngine:
         recommendations (input order) and the ServingReport.
         """
         cfg = self.config
+        rt = self.runtime
         t_wall = time.perf_counter()
+        # a run that raised mid-way (invariant check, scoring error) leaves
+        # orphaned records; this plane owns its runtime, so anything still
+        # live belongs to no report — drop it before marking
+        rt.ledger.take_since(0)
+        mark = rt.ledger.mark()
         bits = [self._as_bits(q) for q in queries]
         keys = [basket_key(b) for b in bits]
         n = len(bits)
@@ -245,8 +259,8 @@ class RecommendationEngine:
             if n and (np.diff(arrival) < 0).any():
                 raise ValueError("arrival_s must be non-decreasing")
 
-        report = ServingReport(backend=self.backend,
-                               policy=self.scheduler.policy, k=cfg.k,
+        report = ServingReport(backend=self.backend, policy=rt.policy.name,
+                               split=rt.split, k=cfg.k,
                                n_queries=n, index_rows=self.index.n_rows,
                                index_version=self.index.version)
         results: List[Optional[Recommendation]] = [None] * n
@@ -275,39 +289,30 @@ class RecommendationEngine:
                     miss_idx.append(j)
 
             # serial admission/dispatch: best core runs, the rest gate off
-            adm = self.scheduler.assign_serial(TaskSpec(
+            _, adm = rt.run_serial(
                 f"serve-admit-{report.n_batches}",
-                cost=max(1.0, bucket * cfg.admission_unit_cost),
-                parallel=False))
-            d0 = adm.serial_device
-            t_serial = float(adm.est_finish[d0])
-            if self.power is not None:
-                busy = np.zeros(self.profile.n)
-                busy[d0] = t_serial
-                report.energy_j += self.power.energy(busy, t_serial,
-                                                     gated=adm.gated)
+                cost=max(1.0, bucket * cfg.admission_unit_cost))
+            t_serial = adm.sim_time_s
 
             makespan = 0.0
             if miss_idx:
-                recs = self._score_batch([bits[j] for j in miss_idx], bucket)
+                # parallel scoring: the padded bucket is what the data plane
+                # runs, so every slot is a schedulable tile
+                task = TaskSpec(f"serve-score-{report.n_batches}",
+                                cost=bucket * per_query_cost, parallel=True,
+                                n_tiles=bucket, family="serve-score")
+
+                def execute(_asg, _costs, rows=miss_idx, b=bucket):
+                    return MeasuredPhase(result=self._score_batch(
+                        [bits[j] for j in rows], b))
+
+                # each core spun up away from the admission core is a switch
+                recs, score_rec = rt.run_phase(task, execute,
+                                               spinup_from=adm.device)
+                makespan = score_rec.sim_time_s
                 for j, rec in zip(miss_idx, recs):
                     results[j] = rec
                     self.cache.put(keys[j], rec)
-                # parallel scoring: the padded bucket is what the data plane
-                # runs, so every slot is a schedulable tile
-                asg = self.scheduler.assign_parallel(TaskSpec(
-                    f"serve-score-{report.n_batches}",
-                    cost=bucket * per_query_cost, parallel=True,
-                    n_tiles=bucket))
-                makespan = asg.makespan
-                # each core spun up away from the admission core is a switch
-                sw = sum(1 for d, ts in enumerate(asg.tiles_of)
-                         if ts and d != d0)
-                report.switches += sw
-                if self.power is not None:
-                    report.energy_j += self.power.energy(
-                        asg.est_finish, makespan, gated=asg.gated,
-                        switches=sw)
 
             t_done = t + t_serial + makespan
             for j in range(i, i + batch_n):
@@ -326,5 +331,8 @@ class RecommendationEngine:
         if n:
             report.p50_latency_s = float(np.percentile(latencies, 50))
             report.p99_latency_s = float(np.percentile(latencies, 99))
+        report.ledger = rt.ledger.take_since(mark)
+        report.energy_j = report.ledger.total_energy_j
+        report.switches = report.ledger.total_switches
         report.wall_time_s = time.perf_counter() - t_wall
         return results, report

@@ -176,7 +176,7 @@ def test_midround_death_charges_gated_tail_not_idle():
     idle_billing = power.energy(
         np.array(r.map_busy_s), r.map_makespan_s,
         gated=[d for d, b in enumerate(r.map_busy_s) if b == 0.0],
-        switches=r.switches)
+        switches=r.switches + r.reissued)   # every migration is priced
     assert r.energy_j < idle_billing
 
 
@@ -198,10 +198,10 @@ def test_preused_scheduler_switch_counter_not_recounted():
 def test_policy_equal_is_no_faster_than_lpt():
     T = small_db(n_tx=600, seed=4)
     times = {}
-    for policy in ("equal", "lpt"):
+    for split in ("equal", "lpt"):
         res = MarketBasketPipeline(
             HeterogeneityProfile.paper(),
             PipelineConfig(min_support=0.05, n_tiles=16,
-                           policy=policy)).run(T)
-        times[policy] = res.report.total_time_s
+                           split=split)).run(T)
+        times[split] = res.report.total_time_s
     assert times["lpt"] <= times["equal"] + 1e-9

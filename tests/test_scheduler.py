@@ -115,6 +115,69 @@ def test_ewma_observe_moves_towards_rate():
     assert p.speeds[1] == 10.0
 
 
+# ---------------------------------------------------------------------------
+# scheduler invariants (runtime-refactor satellite): for every policy and
+# after rebalance / speculate+apply_moves, tiles_of stays an exact partition
+# of the tile set and reported switches equal actual owner changes
+# ---------------------------------------------------------------------------
+
+def _assert_exact_partition(asg, n_tiles):
+    seen = sorted(t for ts in asg.tiles_of for t in ts)
+    assert seen == list(range(n_tiles)), "tiles lost or duplicated"
+
+
+@settings(max_examples=50, deadline=None)
+@given(profiles(), tile_cost_arrays(),
+       st.sampled_from(["lpt", "proportional", "equal"]),
+       st.integers(0, 2**31 - 1))
+def test_partition_invariant_survives_rebalance(profile, costs, policy, seed):
+    sched = MBScheduler(profile, policy=policy)
+    task = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    asg = sched.assign_parallel(task, costs)
+    _assert_exact_partition(asg, len(costs))
+    # dynamic switching: a random speed observation, then a re-plan
+    rng = np.random.default_rng(seed)
+    dev = int(rng.integers(profile.n))
+    sched.profile.observe(dev, work_done=float(rng.uniform(0.1, 100.0)),
+                          seconds=float(rng.uniform(0.1, 100.0)))
+    sw0 = sched.switches
+    new, moved = sched.rebalance(task, asg, costs)
+    _assert_exact_partition(new, len(costs))
+    before, after = asg.owner_of(), new.owner_of()
+    actual_moves = sum(1 for t in after if after[t] != before[t])
+    assert moved == actual_moves                 # reported == actual
+    assert sched.switches - sw0 == moved         # lifetime counter agrees
+
+
+@settings(max_examples=50, deadline=None)
+@given(profiles(), tile_cost_arrays(),
+       st.sampled_from(["lpt", "proportional", "equal"]),
+       st.integers(0, 2**31 - 1))
+def test_partition_invariant_survives_speculate_apply(profile, costs,
+                                                      policy, seed):
+    sched = MBScheduler(profile, policy=policy)
+    task = TaskSpec("t", float(costs.sum()), parallel=True, n_tiles=len(costs))
+    asg = sched.assign_parallel(task, costs)
+    rng = np.random.default_rng(seed)
+    progress = rng.uniform(0.0, 1.0, profile.n)
+    progress[rng.integers(profile.n)] = 1.0      # at least one idle helper
+    sw0 = sched.switches
+    moves = sched.speculate(asg, progress)
+    assert sched.switches - sw0 == len(moves)    # reported == actual
+    applied = sched.apply_moves(asg, moves, costs)
+    _assert_exact_partition(applied, len(costs))
+    before, after = asg.owner_of(), applied.owner_of()
+    assert sum(1 for t in after if after[t] != before[t]) == len(moves)
+    # re-issued tiles really left the straggler: a repeat speculation (with
+    # the helpers re-measured as finished, as a fresh checkpoint would see
+    # them) can never pick the same tiles again — the satellite bug was that
+    # an unmutated assignment re-issued them forever
+    progress2 = progress.copy()
+    progress2[[h for _, h in moves]] = 1.0
+    again = sched.speculate(applied, progress2)
+    assert {t for t, _ in moves}.isdisjoint({t for t, _ in again})
+
+
 def test_makespan_simulation_matches_estimate():
     profile = HeterogeneityProfile.paper()
     costs = np.random.default_rng(0).uniform(1, 20, 37)

@@ -1,7 +1,9 @@
 """Distributed mining plane: sharded-vs-single-device parity, run_sharded
-vs SimulatedCluster parity, energy on the sharded path, and device_loss →
-shard re-planning.  Device-backed checks run in a subprocess with 8 forced
-host devices (like test_distributed); plan math is tested host-side."""
+vs SimulatedCluster parity, energy on the sharded path (priced by the
+shared Runtime ledger), switching-policy independence of the mined result,
+and device_loss → shard re-planning.  Device-backed checks run in a
+subprocess with 8 forced host devices (like test_distributed); plan math
+is tested host-side."""
 import json
 import os
 import subprocess
@@ -22,10 +24,12 @@ import jax, jax.numpy as jnp
 from repro.core.hetero import HeterogeneityProfile
 from repro.core.mapreduce import (MapReduceJob, SimulatedCluster, run_sharded)
 from repro.core.power import PowerModel
+from repro.core.scheduler import TaskSpec
 from repro.data.baskets import BasketConfig, generate_baskets
 from repro.distributed.fault import FaultEvent, FaultPlan
 from repro.distributed.mining import ShardedMiner, make_shard_mesh, mesh_profile
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
+from repro.runtime import MeasuredPhase, Runtime
 
 out = {}
 
@@ -41,14 +45,25 @@ job = MapReduceJob("wc",
 sim, sim_rep = SimulatedCluster(profile).run(job, tiles)
 mesh = make_shard_mesh(n_dev)
 shard, shard_rep = run_sharded(job, jnp.concatenate([jnp.asarray(t) for t in tiles]),
-                               mesh, mesh.axis_names[0], profile=profile,
-                               power=PowerModel.cpu(profile))
+                               mesh, mesh.axis_names[0], profile=profile)
 out["parity_value_ok"] = bool((np.asarray(sim) == np.asarray(shard)).all())
 
-# ---- 2. satellite bugfix: energy_j is computed on the sharded path too
-out["sharded_energy_ok"] = (shard_rep.energy_j is not None
-                            and shard_rep.energy_j > 0)
-out["sharded_makespan_ok"] = shard_rep.makespan > 0
+# ---- 2. sharded energy is priced by the shared Runtime (exactly once):
+# drive the same shard_map job through Runtime.run_phase with the shard
+# layout as a pinned assignment, as ShardedMiner does
+rt = Runtime(profile, policy="static", power=PowerModel.cpu(profile))
+costs = np.full(n_dev, 32.0 * 4)                 # bytes per rank
+def _exec(asg, c):
+    res, rep = run_sharded(job, jnp.concatenate(
+        [jnp.asarray(t) for t in tiles]), mesh, mesh.axis_names[0])
+    return MeasuredPhase(result=res, wall_s=rep.makespan)
+shard2, rec = rt.run_phase(
+    TaskSpec("wc-runtime", float(costs.sum()), parallel=True, n_tiles=n_dev),
+    _exec, tile_costs=costs, assignment=rt.pinned_assignment(costs))
+out["sharded_energy_ok"] = rec.energy_j > 0
+out["sharded_makespan_ok"] = (rec.sim_time_s > 0
+                              and bool((np.asarray(sim)
+                                        == np.asarray(shard2)).all()))
 
 # ---- 3. sharded miner == single-device pipeline, bit for bit
 T = generate_baskets(BasketConfig(n_tx=1024, n_items=48, seed=7))
@@ -89,6 +104,20 @@ out["hetero_split_ok"] = bool(
     and rows[np.argmax(prof.speeds)] == rows.max()
     and rows[np.argmax(prof.speeds)] > rows[np.argmin(prof.speeds)])
 
+# ---- 6. switching-policy independence: dynamic mines bit-identically and
+# the report carries the policy + a consistent ledger
+miner4 = ShardedMiner(config=cfg, policy="dynamic", verify_rounds=True)
+res4 = miner4.run(T)
+led = res4.report.ledger
+out["dynamic_parity_ok"] = (res4.supports == single.supports
+                            and res4.rules == single.rules
+                            and res4.report.policy == "dynamic")
+out["ledger_ok"] = (led is not None
+                    and abs(led.total_energy_j
+                            - res4.report.total_energy_j) < 1e-9
+                    and led.n_phases >= 2 * res4.report.n_rounds
+                    and led.total_time_s > 0)
+
 print("RESULT" + json.dumps({k: bool(v) for k, v in out.items()}))
 '''
 
@@ -127,6 +156,14 @@ def test_device_loss_triggers_replan(mining_results):
 
 def test_heterogeneous_split_follows_speeds(mining_results):
     assert mining_results["hetero_split_ok"]
+
+
+def test_dynamic_policy_mines_identically(mining_results):
+    assert mining_results["dynamic_parity_ok"]
+
+
+def test_report_totals_come_from_the_ledger(mining_results):
+    assert mining_results["ledger_ok"]
 
 
 # ---- host-side plan math (no devices needed) ------------------------------

@@ -13,7 +13,7 @@ def test_end_to_end_mining_matches_oracle():
     from repro.launch.mine import mine
     result = mine(n_tx=600, n_items=48, min_support=0.05,
                   min_confidence=0.5, profile_name="paper",
-                  policy="lpt", n_tiles=8, top=0)
+                  split="lpt", n_tiles=8, top=0)
     T = pad_items(generate_baskets(BasketConfig(n_tx=600, n_items=48, seed=0)))
     want = apriori_bruteforce(T, max(1, int(0.05 * 600)), max_k=8)
     assert result.supports == want
@@ -23,9 +23,9 @@ def test_end_to_end_mining_matches_oracle():
 def test_mining_lpt_beats_equal_split_makespan():
     from repro.launch.mine import mine
     r_lpt = mine(n_tx=512, n_items=32, min_support=0.05,
-                 min_confidence=0.6, policy="lpt", n_tiles=16, top=0)
+                 min_confidence=0.6, split="lpt", n_tiles=16, top=0)
     r_eq = mine(n_tx=512, n_items=32, min_support=0.05,
-                min_confidence=0.6, policy="equal", n_tiles=16, top=0)
+                min_confidence=0.6, split="equal", n_tiles=16, top=0)
     assert r_lpt.report.total_time_s < r_eq.report.total_time_s
     assert r_lpt.supports == r_eq.supports     # schedule never changes results
 
