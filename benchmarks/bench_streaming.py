@@ -1,0 +1,89 @@
+"""B10 — streaming plane: incremental delta-update vs from-scratch re-mine.
+
+The claim the streaming plane exists for: once the window is warm and the
+frequent-set lattice is stable, absorbing a micro-batch costs work
+proportional to the *batch* (delta support counting on the arrive/evict
+slabs) instead of the *window* (a full Apriori re-mine).  The stream is
+``stationary_baskets`` — disjoint high-margin patterns — so no measured
+batch triggers a re-validation; ``generate_baskets``-style threshold
+churn is the re-validation path, which B10 deliberately excludes (it
+would measure Apriori again, which B6 already does).
+
+Rows (host wall, measured; the delta/re-mine pair runs on identical
+windows and the final states are asserted bit-identical):
+
+  streaming_delta_batch_wall    us per micro-batch, incremental path
+                                (derived = re-validations in the span,
+                                must be 0)
+  streaming_remine_batch_wall   us per micro-batch, one-shot pipeline on
+                                the same window (derived = speedup x)
+  streaming_refresh_latency     us from rules regeneration to the index
+                                being visible in the live engine
+                                (derived = refreshes in the span)
+
+Gate: the delta path must be strictly faster per batch than re-mining —
+a regression here means the incremental plane lost its reason to exist.
+"""
+import time
+
+import numpy as np
+
+from repro.data.baskets import stationary_baskets
+from repro.pipeline import MarketBasketPipeline
+from repro.serving import RecommendationEngine, RuleIndex, ServingConfig
+from repro.streaming import StreamingConfig, StreamingMiner, TransactionStream
+
+WINDOW, BATCH, N_ITEMS, K = 2048, 128, 64, 8
+
+
+def run(csv_rows):
+    cfg = StreamingConfig(window=WINDOW, batch_size=BATCH, min_support=0.08,
+                          min_confidence=0.6, n_tiles=8, data_plane="ref")
+    T = stationary_baskets(WINDOW + (K + 4) * BATCH, N_ITEMS, seed=3)
+    batches = list(TransactionStream(T, BATCH))
+
+    engine = RecommendationEngine(
+        RuleIndex.build([], N_ITEMS),
+        config=ServingConfig(k=5, data_plane="ref"))
+    miner = StreamingMiner(N_ITEMS, config=cfg, engine=engine)
+
+    # warm: fill the window, settle the lattice, compile both data planes
+    warm = WINDOW // BATCH + 2
+    for b in batches[:warm]:
+        miner.process_batch(b)
+    MarketBasketPipeline(config=cfg.pipeline_config()).run(
+        miner.window.rows_raw())
+
+    delta_s, remine_s, refresh_s, revals = [], [], [], 0
+    for b in batches[warm:warm + K]:
+        rep = miner.process_batch(b)
+        delta_s.append(rep.wall_s)
+        revals += int(rep.revalidated)
+        if rep.rules_refreshed:
+            refresh_s.append(rep.refresh_latency_s)
+        t0 = time.perf_counter()
+        res = MarketBasketPipeline(config=cfg.pipeline_config()).run(
+            miner.window.rows_raw())
+        remine_s.append(time.perf_counter() - t0)
+        # the comparison is only meaningful if both paths mined the same
+        # thing — parity is the streaming plane's contract
+        if miner.supports != res.supports or miner.rules != res.rules:
+            raise AssertionError("streaming state diverged from the "
+                                 "one-shot re-mine — delta path is broken")
+
+    delta_us = float(np.mean(delta_s)) * 1e6
+    remine_us = float(np.mean(remine_s)) * 1e6
+    refresh_us = float(np.mean(refresh_s)) * 1e6 if refresh_s else 0.0
+    csv_rows.append(("streaming_delta_batch_wall", delta_us, float(revals)))
+    csv_rows.append(("streaming_remine_batch_wall", remine_us,
+                     remine_us / max(delta_us, 1e-9)))
+    csv_rows.append(("streaming_refresh_latency", refresh_us,
+                     float(len(refresh_s))))
+    if delta_us >= remine_us:
+        raise AssertionError(
+            f"delta update ({delta_us:.0f}us/batch) must beat from-scratch "
+            f"re-mining ({remine_us:.0f}us/batch) on a stable window")
+    if revals:
+        raise AssertionError(
+            f"{revals} re-validation(s) in the measured span — the "
+            f"stationary stream should never destabilize the lattice")

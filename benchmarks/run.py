@@ -13,6 +13,9 @@
                              device_count=8 for the full curve)
   B9 bench_policies        — switching policies (static vs dynamic vs
                              costmodel under an injected straggler)
+  B10 bench_streaming      — streaming plane (incremental delta-update vs
+                             from-scratch re-mine per micro-batch;
+                             rule-refresh-to-visible latency)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -33,7 +36,8 @@ import sys
 
 from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
                         bench_policies, bench_power, bench_roofline,
-                        bench_scheduler, bench_serving, bench_sharded_mining)
+                        bench_scheduler, bench_serving,
+                        bench_sharded_mining, bench_streaming)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -45,6 +49,7 @@ SUITES = {
     "B7": ("serving", bench_serving.run),
     "B8": ("sharded_mining", bench_sharded_mining.run),
     "B9": ("policies", bench_policies.run),
+    "B10": ("streaming", bench_streaming.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")

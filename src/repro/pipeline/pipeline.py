@@ -92,11 +92,32 @@ class PipelineConfig:
     # map phases share one time axis).  Calibrated so candidate generation
     # is small-but-visible next to counting, as in the paper.
     serial_unit_cost: float = 64.0
+    # Required core speed for serial phases: when no core satisfies it,
+    # assign_serial falls back to the fastest core and flags the phase
+    # (surfaced as PipelineReport.constraint_violations, never silent).
+    serial_min_speed: float = 0.0
 
     def abs_support(self, n_tx: int) -> int:
         if self.min_support <= 1.0:
             return max(1, int(self.min_support * n_tx))
         return int(self.min_support)
+
+
+def candgen_cost(n_frequent: int, k: int, unit_cost: float) -> float:
+    """Work units for the serial F_{k-1}⋈F_{k-1} join/prune phase.
+
+    Shared by the batch pipeline and the streaming plane's re-validation
+    pass — the two Apriori drivers must price (and therefore schedule)
+    identical rounds identically, or their ledgers drift."""
+    return max(1.0, n_frequent * k * unit_cost)
+
+
+def support_flops(tile_rows: np.ndarray, n_items: int,
+                  m_padded: int) -> np.ndarray:
+    """Roofline seed for a support-count map phase: the kernel's MXU work
+    is 2·rows·items·candidates per tile (bytes are rows·items).  Shared
+    across the Apriori drivers for the same reason as candgen_cost."""
+    return 2.0 * tile_rows * n_items * max(m_padded, 1)
 
 
 @dataclass
@@ -218,8 +239,9 @@ class MarketBasketPipeline:
         while frequent and (cfg.max_k == 0 or k <= cfg.max_k):
             cands, serial = rt.run_serial(
                 f"mba-candgen-k{k}",
-                cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
-                fn=lambda fr=frequent: generate_candidates(fr))
+                cost=candgen_cost(len(frequent), k, cfg.serial_unit_cost),
+                fn=lambda fr=frequent: generate_candidates(fr),
+                min_speed=cfg.serial_min_speed)
             if not cands:
                 report.rounds.append(RoundReport.from_phases(
                     k=k, n_candidates=0, n_frequent=0, map_phase=None,
@@ -233,12 +255,10 @@ class MarketBasketPipeline:
                 combine_fn=lambda a, b: a + b,
                 zero_fn=lambda m=len(cands): np.zeros(m, dtype=np.int64),
             )
-            # roofline seed for the costmodel policy: the kernel's MXU work
-            # is 2·rows·items·candidates per tile (bytes are rows·items)
             m_padded = self.data_plane.m_padded
             sup, rec = self._map_round(
                 job, tiles, failures,
-                tile_flops=2.0 * tile_rows * n_items * m_padded)
+                tile_flops=support_flops(tile_rows, n_items, m_padded))
             frequent = []
             for c, s in zip(cands, sup):
                 if s >= min_sup:
@@ -255,7 +275,8 @@ class MarketBasketPipeline:
             cost=max(1.0, len(supports) * cfg.serial_unit_cost),
             fn=lambda: generate_rules(
                 AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
-                cfg.min_confidence, min_lift=cfg.min_lift))
+                cfg.min_confidence, min_lift=cfg.min_lift),
+            min_speed=cfg.serial_min_speed)
         report.rules_phase = rules_rec
 
         report.n_itemsets = len(supports)

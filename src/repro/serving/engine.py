@@ -67,6 +67,10 @@ class ServingConfig:
     # size (each query is matched against every rule row).
     admission_unit_cost: float = 8.0
     score_unit_cost: float = 1.0 / 128.0
+    # Required core speed for the serial admission phase: when no core
+    # satisfies it, assign_serial falls back to the fastest core and flags
+    # the phase (surfaced as ServingReport.constraint_violations).
+    admission_min_speed: float = 0.0
 
 
 @dataclass
@@ -91,6 +95,7 @@ class ServingReport:
     switches: int = 0
     index_rows: int = 0
     index_version: int = 0
+    constraint_violations: int = 0  # admission phases below their min_speed
     ledger: Optional[ExecLedger] = None   # this call's phase records
 
     @property
@@ -111,7 +116,7 @@ class ServingReport:
     def summary(self) -> str:
         buckets = "/".join(f"{b}:{c}" for b, c in
                            sorted(self.bucket_counts.items()))
-        return (
+        text = (
             f"RecommendationEngine: backend={self.backend} "
             f"policy={self.policy} split={self.split} k={self.k} "
             f"index_rows={self.index_rows} v{self.index_version}\n"
@@ -123,6 +128,10 @@ class ServingReport:
             f"(p50 {self.p50_latency_s:.4f}s, p99 {self.p99_latency_s:.4f}s) "
             f"| {self.energy_j:.1f} J, {self.switches} core switches | "
             f"wall {self.wall_time_s:.3f}s = {self.wall_qps:.0f} QPS")
+        if self.constraint_violations:
+            text += (f"\n  WARNING: {self.constraint_violations} admission "
+                     f"phase(s) ran on a core below their min_speed")
+        return text
 
 
 class RecommendationEngine:
@@ -291,7 +300,8 @@ class RecommendationEngine:
             # serial admission/dispatch: best core runs, the rest gate off
             _, adm = rt.run_serial(
                 f"serve-admit-{report.n_batches}",
-                cost=max(1.0, bucket * cfg.admission_unit_cost))
+                cost=max(1.0, bucket * cfg.admission_unit_cost),
+                min_speed=cfg.admission_min_speed)
             t_serial = adm.sim_time_s
 
             makespan = 0.0
@@ -334,5 +344,7 @@ class RecommendationEngine:
         report.ledger = rt.ledger.take_since(mark)
         report.energy_j = report.ledger.total_energy_j
         report.switches = report.ledger.total_switches
+        report.constraint_violations = \
+            len(report.ledger.constraint_violations())
         report.wall_time_s = time.perf_counter() - t_wall
         return results, report

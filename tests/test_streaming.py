@@ -1,0 +1,245 @@
+"""Streaming plane: sliding-window delta algebra, incremental-vs-batch
+parity (hypothesis), re-validation triggers, refresh semantics, and the
+ledger accounting contract shared with the other planes."""
+import numpy as np
+import pytest
+
+from repro.core.itemsets import itemsets_to_bitmap
+from repro.data.baskets import (BasketConfig, generate_baskets,
+                                stationary_baskets)
+from repro.kernels.support_count.ref import support_count_ref
+from repro.pipeline import MarketBasketPipeline
+from repro.streaming import (SlidingWindow, StreamingConfig, StreamingMiner,
+                             TransactionStream)
+
+
+def small_cfg(**kw):
+    base = dict(window=256, batch_size=64, min_support=0.05,
+                min_confidence=0.5, n_tiles=4, data_plane="ref",
+                power="none")
+    base.update(kw)
+    return StreamingConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# sources: TransactionStream + SlidingWindow
+# ---------------------------------------------------------------------------
+
+def test_stream_batches_cover_corpus_in_order():
+    T = generate_baskets(BasketConfig(n_tx=100, n_items=16, seed=0))
+    s = TransactionStream(T, 32)
+    batches = list(s)
+    assert [len(b) for b in batches] == [32, 32, 32, 4]
+    assert s.n_batches == 4
+    np.testing.assert_array_equal(np.concatenate(batches), T)
+    assert len(s.take(2)) == 2
+    with pytest.raises(ValueError):
+        TransactionStream(T, 0)
+    with pytest.raises(ValueError):
+        TransactionStream(np.array([[0, 2]]), 1)    # not 0/1
+
+
+def test_window_push_returns_exact_slabs():
+    w = SlidingWindow(4, 8)
+    a1, e1 = w.push(np.eye(3, 8, dtype=np.uint8))
+    assert a1.shape == (3, 128) and e1.shape == (0, 128)
+    assert w.n == 3 and not w.full
+    # second push overflows by 2: the two oldest rows evict
+    a2, e2 = w.push(np.ones((3, 8), dtype=np.uint8))
+    assert w.n == 4 and w.full
+    np.testing.assert_array_equal(e2[:, :8], np.eye(3, 8, dtype=np.uint8)[:2])
+    # arrival order preserved: eye row 2, then the three all-ones rows
+    np.testing.assert_array_equal(
+        w.rows_raw(),
+        np.vstack([np.eye(3, 8, dtype=np.uint8)[2:],
+                   np.ones((3, 8), dtype=np.uint8)]))
+
+
+def test_window_batch_larger_than_capacity_stays_exact():
+    """Rows that arrive and evict in one push must cancel in the delta."""
+    rng = np.random.default_rng(0)
+    w = SlidingWindow(4, 8)
+    w.push(rng.integers(0, 2, size=(2, 8)).astype(np.uint8))
+    old_sum = w.rows().sum(axis=0, dtype=np.int64)
+    big = rng.integers(0, 2, size=(7, 8)).astype(np.uint8)
+    arrived, evicted = w.push(big)
+    assert arrived.shape[0] == 7 and evicted.shape[0] == 5
+    np.testing.assert_array_equal(w.rows_raw(), big[-4:])
+    # delta algebra: sum(window) == old sum + arrived - evicted
+    np.testing.assert_array_equal(
+        w.rows().sum(axis=0, dtype=np.int64),
+        old_sum + arrived.sum(axis=0, dtype=np.int64)
+        - evicted.sum(axis=0, dtype=np.int64))
+
+
+def test_window_rows_do_not_alias_caller_buffer():
+    """With n_items already lane-aligned, pad_items is a no-op — the window
+    must still own its rows, or a caller reusing one buffer across pushes
+    silently rewrites history."""
+    buf = np.zeros((2, 128), dtype=np.uint8)     # 128 = no padding path
+    buf[:, 0] = 1
+    w = SlidingWindow(8, 128)
+    w.push(buf)
+    buf[:, :] = 0
+    buf[:, 5] = 1                                # caller reuses the buffer
+    w.push(buf)
+    rows = w.rows_raw()
+    assert rows[:2, 0].all() and not rows[:2, 5].any()   # history intact
+    assert rows[2:, 5].all() and not rows[2:, 0].any()
+
+
+# ---------------------------------------------------------------------------
+# delta counters stay exact without re-validation
+# ---------------------------------------------------------------------------
+
+def test_delta_counters_match_full_recount_between_validations():
+    T = stationary_baskets(1024, 32, n_patterns=4, seed=5)
+    cfg = small_cfg(min_support=0.15)
+    miner = StreamingMiner(32, config=cfg)
+    for batch in TransactionStream(T, cfg.batch_size):
+        miner.process_batch(batch)
+        W = miner.window.rows()
+        if miner._tracked:
+            C = itemsets_to_bitmap(miner._tracked,
+                                   miner.window.n_items_padded)
+            want = np.asarray(support_count_ref(W, C), dtype=np.int64)
+            np.testing.assert_array_equal(miner._tracked_supp, want)
+        np.testing.assert_array_equal(miner._item_counts,
+                                      W.sum(axis=0, dtype=np.int64))
+    # the stationary stream settles: the tail of the run is delta-only
+    assert not miner._batches[-1].revalidated
+
+
+def test_stationary_stream_stops_revalidating():
+    T = stationary_baskets(1536, 32, n_patterns=4, seed=9)
+    cfg = small_cfg(min_support=0.15)
+    miner = StreamingMiner(32, config=cfg)
+    report = miner.run(TransactionStream(T, cfg.batch_size))
+    warm = cfg.window // cfg.batch_size
+    tail = report.batches[warm + 1:]
+    assert tail and not any(b.revalidated for b in tail)
+    # parity still holds at the end of the delta-only tail
+    pipe = MarketBasketPipeline(config=cfg.pipeline_config()).run(
+        miner.window.rows_raw())
+    assert miner.supports == pipe.supports
+    assert miner.rules == pipe.rules
+
+
+def test_boundary_crossing_triggers_revalidation():
+    """Flip the stream distribution mid-run: the lattice must go stale and
+    re-validate, and the state must still match a one-shot mine."""
+    A = stationary_baskets(512, 32, n_patterns=4, seed=1)
+    B = stationary_baskets(512, 32, n_patterns=4, seed=2)   # different patterns
+    cfg = small_cfg(min_support=0.15)
+    miner = StreamingMiner(32, config=cfg)
+    for batch in TransactionStream(A, cfg.batch_size):
+        miner.process_batch(batch)
+    before = len(miner._batches)
+    for batch in TransactionStream(B, cfg.batch_size):
+        miner.process_batch(batch)
+    assert any(b.revalidated for b in miner._batches[before:])
+    pipe = MarketBasketPipeline(config=cfg.pipeline_config()).run(
+        miner.window.rows_raw())
+    assert miner.supports == pipe.supports and miner.rules == pipe.rules
+
+
+def test_revalidate_every_forces_periodic_full_pass():
+    T = stationary_baskets(1024, 32, n_patterns=4, seed=5)
+    cfg = small_cfg(min_support=0.15, revalidate_every=2)
+    miner = StreamingMiner(32, config=cfg)
+    report = miner.run(TransactionStream(T, cfg.batch_size))
+    forced = [b.revalidated for b in report.batches if (b.idx + 1) % 2 == 0]
+    assert forced and all(forced)
+
+
+# ---------------------------------------------------------------------------
+# refresh semantics
+# ---------------------------------------------------------------------------
+
+def test_refresh_every_batches_rule_regeneration_and_flush_closes_gap():
+    T = stationary_baskets(1024, 32, n_patterns=4, seed=5)
+    cfg = small_cfg(min_support=0.15, refresh_every=4)
+    miner = StreamingMiner(32, config=cfg)
+    for batch in TransactionStream(T, cfg.batch_size):
+        miner.process_batch(batch)
+    refreshes = [b for b in miner._batches
+                 if b.rules_refreshed and not b.revalidated]
+    # only every 4th batch refreshed on the delta path
+    assert all(b.idx % 4 == 0 for b in refreshes)
+    # rules may be stale now; flush must restore exact parity
+    miner.flush()
+    pipe = MarketBasketPipeline(config=cfg.pipeline_config()).run(
+        miner.window.rows_raw())
+    assert miner.rules == pipe.rules
+
+
+def test_unchanged_supports_skip_rule_regeneration():
+    """Pushing and evicting identical rows leaves supports untouched: the
+    rules phase must not run again (no-op refresh)."""
+    row = np.zeros((1, 8), dtype=np.uint8)
+    row[0, :3] = 1
+    cfg = StreamingConfig(window=4, batch_size=1, min_support=0.5,
+                          min_confidence=0.5, n_tiles=1, data_plane="ref",
+                          power="none")
+    miner = StreamingMiner(8, config=cfg)
+    for _ in range(8):                      # window cycles identical rows
+        rep = miner.process_batch(row)
+    assert not rep.rules_refreshed          # supports never moved
+    assert miner.index is not None
+    v = miner.index.version
+    miner.flush()
+    assert miner.index.version == v         # flush is a no-op too
+
+
+def test_index_version_monotone_and_engine_hot_swap():
+    from repro.serving import RecommendationEngine, RuleIndex, ServingConfig
+    T = generate_baskets(BasketConfig(n_tx=768, n_items=24, seed=4))
+    cfg = small_cfg(window=128, batch_size=64, min_support=0.08)
+    engine = RecommendationEngine(
+        RuleIndex.build([], 24),
+        config=ServingConfig(k=3, data_plane="ref"))
+    miner = StreamingMiner(24, config=cfg, engine=engine)
+    versions = []
+    for batch in TransactionStream(T, cfg.batch_size):
+        rep = miner.process_batch(batch)
+        versions.append(engine.index.version)
+        assert engine.index is miner.index   # the swap is the same object
+    assert versions == sorted(versions)      # monotone non-decreasing
+    assert versions[-1] > 0                  # the stream did refresh
+
+
+# ---------------------------------------------------------------------------
+# accounting: the streaming plane speaks the shared ledger dialect
+# ---------------------------------------------------------------------------
+
+def test_ledger_slice_backs_report_totals():
+    T = stationary_baskets(768, 32, n_patterns=4, seed=5)
+    cfg = small_cfg(min_support=0.15, power="cpu")
+    miner = StreamingMiner(32, config=cfg)
+    report = miner.run(TransactionStream(T, cfg.batch_size))
+    assert report.ledger is not None and report.ledger.n_phases > 0
+    # every batch's phase count sums to the ledger slice: one PhaseRecord
+    # per phase, none lost, none double-counted
+    assert sum(b.n_phases for b in report.batches) == report.ledger.n_phases
+    assert report.total_energy_j == pytest.approx(
+        report.ledger.total_energy_j)
+    assert report.total_time_s == pytest.approx(report.ledger.total_time_s)
+    assert {p.kind for p in report.ledger.phases} <= {"serial", "map"}
+    # take_report drained the live ledger (long-lived miner, no leak)
+    assert miner.runtime.ledger.n_phases == 0
+    assert "StreamingMiner" in report.summary()
+
+
+def test_policy_knob_reaches_every_phase():
+    T = stationary_baskets(512, 32, n_patterns=4, seed=5)
+    cfg = small_cfg(min_support=0.15, policy="dynamic", power="cpu")
+    miner = StreamingMiner(32, config=cfg)
+    report = miner.run(TransactionStream(T, cfg.batch_size))
+    assert report.policy == "dynamic"
+    assert all(p.policy == "dynamic" for p in report.ledger.phases)
+
+
+# The incremental-vs-batch hypothesis property tests live in
+# tests/test_streaming_props.py behind the established module-top
+# ``pytest.importorskip("hypothesis")`` guard, so this module's unit
+# tests run even where hypothesis is not installed.

@@ -1,0 +1,64 @@
+"""Hypothesis property: incremental-vs-batch mining parity.
+
+For random basket streams, window sizes and micro-batch sizes, the
+StreamingMiner's supports and rules after K micro-batches must be
+bit-identical to a one-shot MarketBasketPipeline over the equivalent
+window — the exactness contract the delta algebra + negative-border
+re-validation trigger guarantees (see repro/streaming/miner.py)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; module skips cleanly without it
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.pipeline import MarketBasketPipeline  # noqa: E402
+from repro.streaming import (StreamingConfig, StreamingMiner,  # noqa: E402
+                             TransactionStream)
+
+
+@st.composite
+def stream_cases(draw):
+    n_items = draw(st.integers(4, 12))
+    n_tx = draw(st.integers(1, 48))
+    window = draw(st.integers(1, 24))
+    batch = draw(st.integers(1, 16))
+    density = draw(st.floats(0.1, 0.6))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    T = (rng.random((n_tx, n_items)) < density).astype(np.uint8)
+    min_support = draw(st.sampled_from([0.1, 0.25, 0.5]))
+    min_conf = draw(st.sampled_from([0.3, 0.6]))
+    return T, window, batch, min_support, min_conf
+
+
+@settings(max_examples=25, deadline=None)
+@given(stream_cases())
+def test_incremental_equals_batch_mining(case):
+    T, window, batch, min_support, min_conf = case
+    cfg = StreamingConfig(window=window, batch_size=batch,
+                          min_support=min_support, min_confidence=min_conf,
+                          n_tiles=2, data_plane="ref", power="none")
+    miner = StreamingMiner(T.shape[1], config=cfg)
+    miner.run(TransactionStream(T, batch))
+    rows = miner.window.rows_raw()
+    assert miner.window.n == min(T.shape[0], window)
+    pipe = MarketBasketPipeline(config=cfg.pipeline_config()).run(rows)
+    assert miner.supports == pipe.supports
+    assert miner.rules == pipe.rules
+
+
+@settings(max_examples=10, deadline=None)
+@given(stream_cases(), st.sampled_from(["static", "dynamic"]))
+def test_parity_is_policy_independent(case, policy):
+    """Scheduling must never change what gets mined, only when/where."""
+    T, window, batch, min_support, min_conf = case
+    cfg = StreamingConfig(window=window, batch_size=batch,
+                          min_support=min_support, min_confidence=min_conf,
+                          n_tiles=2, data_plane="ref", power="none",
+                          policy=policy)
+    miner = StreamingMiner(T.shape[1], config=cfg)
+    miner.run(TransactionStream(T, batch))
+    pipe = MarketBasketPipeline(
+        config=cfg.pipeline_config()).run(miner.window.rows_raw())
+    assert miner.supports == pipe.supports
+    assert miner.rules == pipe.rules

@@ -89,3 +89,146 @@ def test_serving_greedy_deterministic():
     o1 = serve_demo("granite-3-8b", batch=2, prompt_len=8, new_tokens=6)
     o2 = serve_demo("granite-3-8b", batch=2, prompt_len=8, new_tokens=6)
     np.testing.assert_array_equal(o1["tokens"], o2["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# cross-plane closed loop: stream -> index refresh -> live serving
+# ---------------------------------------------------------------------------
+
+def test_stream_refresh_serve_closed_loop_dynamic():
+    """All planes as one system under policy=dynamic: micro-batches mined
+    incrementally, rules hot-swapped into the live engine, queries served
+    from the freshest index — with version monotonicity, no stale reads
+    across refresh(), and the shared-ledger accounting invariants."""
+    from repro.data.baskets import stationary_baskets
+    from repro.serving import (RecommendationEngine, RuleIndex,
+                               ServingConfig, recommend_bruteforce)
+    from repro.streaming import (StreamingConfig, StreamingMiner,
+                                 TransactionStream)
+    n_items = 32
+    # phase 1 and phase 2 of the stream carry different pattern sets, so
+    # the rule set genuinely changes mid-run and refresh() must re-serve
+    T = np.vstack([stationary_baskets(512, n_items, n_patterns=4, seed=1),
+                   stationary_baskets(512, n_items, n_patterns=4, seed=2)])
+    cfg = StreamingConfig(window=256, batch_size=64, min_support=0.15,
+                          min_confidence=0.5, n_tiles=4, data_plane="ref",
+                          policy="dynamic")
+    engine = RecommendationEngine(
+        RuleIndex.build([], n_items),
+        config=ServingConfig(k=3, data_plane="ref", policy="dynamic",
+                             cache_size=256))
+    miner = StreamingMiner(n_items, config=cfg, engine=engine)
+
+    query = list(range(6))                  # covers items of several rules
+    versions, serve_reports = [], []
+    for batch in TransactionStream(T, cfg.batch_size):
+        miner.process_batch(batch)
+        versions.append(engine.index.version)
+        got, srep = engine.serve([query])
+        serve_reports.append(srep)
+        # no stale read: what we got is exactly what the *current* rules
+        # imply — a cache entry surviving a refresh would violate this
+        assert got[0] == recommend_bruteforce(miner.rules, query, 3)
+        # serving the same query twice without a refresh must hit the LRU:
+        # no miss, hence no scoring map phase (admission still runs)
+        _, srep2 = engine.serve([query])
+        assert srep2.cache_hits == 1 and srep2.cache_misses == 0
+        assert not srep2.ledger.by_kind("map")
+
+    # RuleIndex.version is monotone and actually advanced mid-run
+    assert versions == sorted(versions)
+    assert versions[-1] > versions[0] >= 0
+    assert engine.index.version == miner.index.version
+
+    # ledger invariants, streaming plane: every phase emitted exactly one
+    # PhaseRecord, and the report totals ARE the ledger slice totals
+    sreport = miner.take_report()
+    assert sreport.n_revalidations >= 1     # the distribution flip forced it
+    assert sum(b.n_phases for b in sreport.batches) == \
+        sreport.ledger.n_phases
+    assert sreport.total_time_s == pytest.approx(
+        sum(p.sim_time_s for p in sreport.ledger.phases))
+    assert sreport.total_energy_j == pytest.approx(
+        sum(p.energy_j for p in sreport.ledger.phases))
+    assert sreport.total_switches == \
+        sum(p.switches for p in sreport.ledger.phases)
+    assert {p.kind for p in sreport.ledger.phases} <= {"serial", "map"}
+    assert all(p.policy == "dynamic" for p in sreport.ledger.phases)
+
+    # ledger invariants, serving plane: each serve() call owns its slice
+    for srep in serve_reports:
+        assert srep.ledger is not None
+        assert srep.energy_j == pytest.approx(srep.ledger.total_energy_j)
+        assert srep.switches == srep.ledger.total_switches
+        # one serial admission record per batch, plus map scoring records
+        assert len(srep.ledger.by_kind("serial")) == srep.n_batches
+    # nothing leaked into the live runtimes
+    assert miner.runtime.ledger.n_phases == 0
+    assert engine.runtime.ledger.n_phases == 0
+
+
+# ---------------------------------------------------------------------------
+# constraint surfacing end to end (regression: was only unit-tested)
+# ---------------------------------------------------------------------------
+
+def test_min_speed_violation_reaches_pipeline_report():
+    """A serial min_speed no core satisfies must flow from assign_serial
+    through every PhaseRecord into the PipelineReport summary."""
+    from repro.data.baskets import BasketConfig, generate_baskets
+    from repro.pipeline import MarketBasketPipeline, PipelineConfig
+    T = generate_baskets(BasketConfig(n_tx=300, n_items=24, seed=5))
+    res = MarketBasketPipeline(config=PipelineConfig(
+        min_support=0.05, n_tiles=4,
+        serial_min_speed=1e6)).run(T)       # paper cores top out at 400
+    rep = res.report
+    assert rep.constraint_violations >= 2   # candgen rounds + rules phase
+    serial = [p for p in rep.ledger.phases if p.kind == "serial"]
+    assert serial and all(p.constraint_violated for p in serial)
+    assert "WARNING" in rep.summary() and "min_speed" in rep.summary()
+    # the satisfiable case stays clean
+    ok = MarketBasketPipeline(config=PipelineConfig(
+        min_support=0.05, n_tiles=4, serial_min_speed=100.0)).run(T)
+    assert ok.report.constraint_violations == 0
+    assert "WARNING" not in ok.report.summary()
+    assert ok.supports == res.supports      # a flag, never a result change
+
+
+def test_min_speed_violation_reaches_serving_report():
+    from repro.data.baskets import BasketConfig, generate_baskets
+    from repro.pipeline import MarketBasketPipeline, PipelineConfig
+    from repro.serving import (RecommendationEngine, RuleIndex,
+                               ServingConfig)
+    T = generate_baskets(BasketConfig(n_tx=400, n_items=24, seed=2))
+    res = MarketBasketPipeline(config=PipelineConfig(
+        min_support=0.05, min_confidence=0.5, n_tiles=4)).run(T)
+    index = RuleIndex.build(res.rules, 24)
+    engine = RecommendationEngine(
+        index, config=ServingConfig(k=3, batch_buckets=(8,),
+                                    data_plane="ref", cache_size=0,
+                                    admission_min_speed=1e6))
+    queries = [list(np.nonzero(row)[0]) for row in T[:16]]
+    _, rep = engine.serve(queries)
+    assert rep.constraint_violations == rep.n_batches > 0
+    assert "WARNING" in rep.summary() and "min_speed" in rep.summary()
+    # same engine, satisfiable bound: clean report
+    engine2 = RecommendationEngine(
+        index, config=ServingConfig(k=3, batch_buckets=(8,),
+                                    data_plane="ref", cache_size=0,
+                                    admission_min_speed=100.0))
+    _, rep2 = engine2.serve(queries)
+    assert rep2.constraint_violations == 0
+    assert "WARNING" not in rep2.summary()
+
+
+def test_min_speed_violation_reaches_streaming_report():
+    from repro.data.baskets import stationary_baskets
+    from repro.streaming import (StreamingConfig, StreamingMiner,
+                                 TransactionStream)
+    T = stationary_baskets(512, 32, n_patterns=4, seed=3)
+    cfg = StreamingConfig(window=128, batch_size=64, min_support=0.15,
+                          n_tiles=2, data_plane="ref", power="none",
+                          serial_min_speed=1e6)
+    miner = StreamingMiner(32, config=cfg)
+    report = miner.run(TransactionStream(T, cfg.batch_size))
+    assert report.constraint_violations > 0
+    assert "WARNING" in report.summary()
