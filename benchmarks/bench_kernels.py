@@ -19,11 +19,15 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 
 def _time(f, *args, reps=3):
-    f(*args)                        # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
+    # synced warm-up: an unsynced one leaks async compile/dispatch time
+    # into rep 0, and a mean over reps lets that one outlier set the row
+    jax.block_until_ready(f(*args))
+    walls = []
+    for _ in range(max(reps, 3)):
+        t0 = time.perf_counter()
         jax.block_until_ready(f(*args))
-    return (time.perf_counter() - t0) / reps * 1e6
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls)) * 1e6
 
 
 def run(csv_rows):
@@ -37,9 +41,15 @@ def run(csv_rows):
         C[m, rng.choice(I, 3, replace=False)] = 1
     C = jnp.asarray(C)
     t_ref = _time(jax.jit(support_count_ref), T, C)
-    t_pal = _time(lambda a, b: support_count(a, b), T, C)
+    # the historical mxu row (variant pinned) vs the autotuned path
+    # (checked-in cache -> fused packed-popcount on cpu)
+    mxu = {"variant": "mxu", "bn": 512, "bm": 256, "bi": 256}
+    t_pal = _time(lambda a, b: support_count(a, b, tuning=mxu), T, C)
+    t_fused = _time(lambda a, b: support_count(a, b), T, C)
     csv_rows.append(("support_count_ref_us", t_ref, 1.0))
     csv_rows.append(("support_count_pallas_interp_us", t_pal, t_ref / t_pal))
+    csv_rows.append(("support_count_fused_interp_us", t_fused,
+                     t_ref / t_fused))
     flops = 2.0 * N * I * M
     t_tpu = max(flops / PEAK_FLOPS, (N * I + M * I + M * 4) / HBM_BW) * 1e6
     csv_rows.append(("support_count_tpu_roofline_us", t_tpu, flops / 1e9))

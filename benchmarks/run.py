@@ -78,13 +78,16 @@ def _update_baselines(path, rows):
 
 
 def _check_baselines(path, rows, factor, suite_names):
-    base = _load_baselines(path).get("us_per_call", {})
+    data = _load_baselines(path)
+    base = data.get("us_per_call", {})
     regressed, unknown = [], []
     measured = set()
+    walls = {}
     for name, us, _ in rows:
         if us <= 0 or name.endswith("_FAILED"):
             continue
         measured.add(name)
+        walls[name] = us
         want = base.get(name)
         if want is None or want <= 0:
             unknown.append(name)
@@ -92,6 +95,14 @@ def _check_baselines(path, rows, factor, suite_names):
         if us > factor * want:
             regressed.append(f"{name}: {us:.2f}us > {factor:.1f}x "
                              f"baseline {want:.2f}us")
+    # ordering rules: [fast, slow] pairs that must hold *this run* (the
+    # Pallas-beats-ref gate) — checked whenever both rows were measured,
+    # with no noise factor: "strictly faster" means what it says
+    for fast, slow in data.get("rules", {}).get("strictly_faster", []):
+        if fast in walls and slow in walls and walls[fast] >= walls[slow]:
+            regressed.append(
+                f"{fast}: {walls[fast]:.2f}us must be strictly faster "
+                f"than {slow}: {walls[slow]:.2f}us")
     if unknown:
         print(f"# baseline has no entry for {len(unknown)} row(s) "
               f"(not gated): {', '.join(unknown)} — refresh with "

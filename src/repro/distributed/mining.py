@@ -50,7 +50,8 @@ from repro.pipeline.dataplane import pad_candidates, resolve_backend
 from repro.pipeline.pipeline import (Baskets, PipelineConfig, PipelineResult,
                                      ingest_baskets)
 from repro.pipeline.report import PipelineReport, RoundReport
-from repro.runtime import MeasuredPhase, Runtime, SwitchingPolicy
+from repro.runtime import (MeasuredPhase, Runtime, SwitchingPolicy,
+                           autotuned_costmodel)
 from repro.core.rules import generate_rules
 
 DEFAULT_AXIS = "shards"
@@ -200,9 +201,13 @@ class ShardedMiner:
             raise ValueError(f"profile has {self.profile.n} ranks but mesh "
                              f"axis {self.axis!r} has {n}")
         self.config = config or PipelineConfig()
+        policy = policy if policy is not None else self.config.policy
+        if policy == "costmodel" and self.config.autotune:
+            # measured kernel walls replace the datasheet constants
+            policy = autotuned_costmodel("support_count")
         self.runtime = Runtime(
             self.profile,
-            policy=policy if policy is not None else self.config.policy,
+            policy=policy,
             split=self.config.split,
             power=power if power is not None else self.config.power,
             scheduler=scheduler)

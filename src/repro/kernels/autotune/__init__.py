@@ -1,0 +1,29 @@
+"""Kernel autotuning: measured tile/variant selection for the Apriori
+hot-loop kernels.
+
+Three pieces:
+
+* :mod:`repro.kernels.autotune.cache` — the persistent winner store,
+  keyed ``(kernel, shape-bucket, device kind)``, checked in as
+  ``cache.json`` so CI and cold starts get the CI-runner-class winners
+  without re-sweeping.  Missing/corrupt caches degrade to the
+  roofline-seeded defaults in :mod:`repro.launch.tuning`.
+* :mod:`repro.kernels.autotune.tuner` — the sweep: roofline-ordered
+  candidates, ``block_until_ready`` + median-of-reps measurement, every
+  config verified bit-identical against the jnp oracle before it may win.
+* ``CostModelPolicy.from_autotune`` (in :mod:`repro.runtime.policies`)
+  consumes :meth:`AutotuneCache.entries_for`, turning measured walls into
+  effective peak/bandwidth so the scheduler's roofline estimates come
+  from real autotune data instead of constants.
+"""
+from repro.kernels.autotune.cache import (DEFAULT_CACHE_PATH, AutotuneCache,
+                                          default_cache, device_kind,
+                                          resolve_config, shape_bucket)
+from repro.kernels.autotune.tuner import (TuneResult, tune, tune_into,
+                                          standard_shapes)
+
+__all__ = [
+    "DEFAULT_CACHE_PATH", "AutotuneCache", "default_cache", "device_kind",
+    "resolve_config", "shape_bucket", "TuneResult", "tune", "tune_into",
+    "standard_shapes",
+]

@@ -1,0 +1,86 @@
+"""Fused packed-popcount rule-match kernel (the serving twin of
+:mod:`repro.kernels.support_count.fused`).
+
+Same trade as on the mining plane: the MXU variant prices the antecedent
+containment test as one int8 matmul; this variant packs the item axis
+into uint32 words and computes
+
+  dot(Q_q, A_r) == Σ_w popcount(Qw[q, w] & Aw[r, w])
+
+with the subset filter (``== |A_r|``) and the confidence weighting fused
+into the same kernel body — one launch per batch, a 32× smaller item
+contraction, no unweighted match matrix materialized.  The autotuner
+(:mod:`repro.kernels.autotune`) decides per device which variant serves.
+
+Tiling (HBM→VMEM):
+  grid = (B/bb, R/br): each [bb, br] output block is owned by exactly one
+  grid point (no revisits), so both axes are parallel and Pallas' grid
+  pipeline double-buffers the block DMAs.  The word axis rides whole per
+  block (W = I/32 is lanes-small), bounding VMEM by the [bb, br, W]
+  popcount intermediate.
+
+Padding contract (identical to the MXU variant): padded rule rows carry
+``sizes = -1`` so they can never match — popcounts are >= 0 — and
+``conf = 0``; padded query rows are all-zero words.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.support_count.fused import _popcount_dots, pack_words
+
+__all__ = ["pack_words", "rule_scores_fused_pallas", "rule_scores_fused"]
+
+
+def _kernel(q_ref, a_ref, sizes_ref, conf_ref, out_ref):
+    """Grid: (i, j) over (B-tiles, R-tiles); every block owned once."""
+    dots = _popcount_dots(q_ref[...], a_ref[...])           # [bb, br] i32
+    match = (dots == sizes_ref[...]).astype(jnp.float32)    # -1 never hits
+    out_ref[...] = match * conf_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "br", "interpret"))
+def rule_scores_fused_pallas(Qw: jnp.ndarray, Aw: jnp.ndarray,
+                             sizes: jnp.ndarray, conf: jnp.ndarray, *,
+                             bb: int = 256, br: int = 256,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Qw: [B, W] uint32; Aw: [R, W] uint32; sizes: [1, R] i32;
+    conf: [1, R] f32 -> [B, R] f32 confidence-weighted match scores."""
+    B, W = Qw.shape
+    R = Aw.shape[0]
+    bb, br = min(bb, B), min(br, R)
+    assert B % bb == 0 and R % br == 0, (Qw.shape, Aw.shape, (bb, br))
+    grid = (B // bb, R // br)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, W), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, br), lambda i, j: (0, j)),
+            pl.BlockSpec((1, br), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, br), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, R), jnp.float32),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(Qw, Aw, sizes, conf)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "br", "interpret"))
+def rule_scores_fused(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
+                      conf: jnp.ndarray, *, bb: int = 256, br: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Unpacked 0/1 bitmaps in, scores out: packs on device (fuses into
+    this jit).  Q: [B, I] int8; A: [R, I] int8 (item axes 32-aligned);
+    sizes/conf: [1, R] f32 per the index padding contract."""
+    sizes_i = sizes.astype(jnp.int32)        # -1 padding survives the cast
+    return rule_scores_fused_pallas(pack_words(Q), pack_words(A), sizes_i,
+                                    conf.astype(jnp.float32),
+                                    bb=bb, br=br, interpret=interpret)

@@ -1,7 +1,19 @@
 """Jit'd public wrapper for the rule-match kernel family: batched top-k
-recommendation (handles padding and backend selection: Pallas-TPU on TPU,
-jitted pure-jnp ref elsewhere — the same dispatch idiom as the mining
-data plane in ``repro.pipeline.dataplane``)."""
+recommendation (handles padding, backend selection and autotuned
+variant/tile dispatch — the same idiom as the mining data plane in
+``repro.pipeline.dataplane``).
+
+Two score implementations compute bit-identical [B, R] matrices:
+
+* ``mxu``    — the int8-matmul kernel (:mod:`.kernel`).
+* ``packed`` — the fused packed-popcount kernel (:mod:`.fused`): subset
+  test + confidence weighting in one launch over uint32 item words.
+
+The variant + tile shape come from the autotune cache
+(:mod:`repro.kernels.autotune`); cache misses use the roofline-seeded
+default.  Either way the scores fold through the shared
+``topk_from_scores``, so the backends cannot drift on serving semantics.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune.cache import resolve_config
+from repro.kernels.rule_match.fused import rule_scores_fused
 from repro.kernels.rule_match.kernel import rule_scores_pallas
 from repro.kernels.rule_match.ref import (recommend_ref, rule_scores_ref,
                                           topk_from_scores)
@@ -23,12 +37,23 @@ def _pad_axis_to(x: jnp.ndarray, axis: int, target: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
+def _fit(want: int, dim: int) -> int:
+    """Shrink a cached/heuristic tile until it divides the padded dim."""
+    t = max(1, min(int(want), dim))
+    while dim % t:
+        t //= 2
+    return max(t, 1)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("k", "backend", "interpret",
+                   static_argnames=("k", "backend", "variant", "interpret",
                                     "bb", "br", "bi"))
-def _rule_topk(Q, A, sizes, conf, cons, n_items, *, k, backend, interpret,
-               bb, br, bi):
-    if backend == "pallas":
+def _rule_topk(Q, A, sizes, conf, cons, n_items, *, k, backend, variant,
+               interpret, bb, br, bi):
+    if backend == "pallas" and variant == "packed":
+        scores = rule_scores_fused(Q, A, sizes[None, :], conf[None, :],
+                                   bb=bb, br=br, interpret=interpret)
+    elif backend == "pallas":
         scores = rule_scores_pallas(Q, A, sizes[None, :], conf[None, :],
                                     bb=bb, br=br, bi=bi, interpret=interpret)
     else:
@@ -39,17 +64,23 @@ def _rule_topk(Q, A, sizes, conf, cons, n_items, *, k, backend, interpret,
 def rule_topk(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
               conf: jnp.ndarray, cons: jnp.ndarray, *, k: int, n_items: int,
               backend: str | None = None,
-              interpret: bool | None = None):
+              interpret: bool | None = None,
+              tuning=None):
     """Top-k item recommendations for a batch of query baskets.
 
     Q: [B, I] 0/1 baskets; A: [R, I] 0/1 antecedent masks; sizes: [R]
     (=|A_r|); conf: [R] rule confidences; cons: [R] consequent item ids.
-    Pads B→8·, R→128·, I→128· as the kernel requires — padded rule rows
+    Pads B→8·, R→128·, I→128· as the kernels require — padded rule rows
     get ``sizes=-1`` (never match; an all-zero row would match everything),
     ``conf=0`` and ``cons=I_padded`` (a dummy max-segment sliced away).
-    Returns (items [B, k] int32, scores [B, k] f32) ordered by
+    An all-padding index (R=0) still scores: every query simply matches
+    nothing.  Returns (items [B, k] int32, scores [B, k] f32) ordered by
     (score desc, item id asc); entries with score <= 0 are non-matches the
     caller should drop.
+
+    ``tuning``: ``None`` = the checked-in autotune cache; ``False`` =
+    roofline-seeded default config; a config ``dict`` or an
+    ``AutotuneCache`` pins the choice.
     """
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "ref"
@@ -66,7 +97,9 @@ def rule_topk(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
     Q = _pad_axis_to(jnp.asarray(Q, jnp.int8), 1, Ip)
     Q = _pad_axis_to(Q, 0, B0 + (-B0) % 8)
     A = _pad_axis_to(jnp.asarray(A, jnp.int8), 1, Ip)
-    Rp = R0 + (-R0) % 128
+    # an empty rule set still pads to one full lane block of never-match
+    # rows so the kernel grid stays non-degenerate
+    Rp = max(R0 + (-R0) % 128, 128)
     A = _pad_axis_to(A, 0, Rp)
     pad_r = Rp - R0
     sizes = jnp.pad(jnp.asarray(sizes, jnp.float32), (0, pad_r),
@@ -74,17 +107,15 @@ def rule_topk(Q: jnp.ndarray, A: jnp.ndarray, sizes: jnp.ndarray,
     conf = jnp.pad(jnp.asarray(conf, jnp.float32), (0, pad_r))
     cons = jnp.pad(jnp.asarray(cons, jnp.int32), (0, pad_r),
                    constant_values=Ip)
-    # grid-divisibility: shrink blocks to gcd-friendly sizes
-    bb, br, bi = min(256, Q.shape[0]), min(256, Rp), min(512, Ip)
-    while Q.shape[0] % bb:
-        bb //= 2
-    while Rp % br:
-        br //= 2
-    while Ip % bi:
-        bi //= 2
+    B, _ = Q.shape
+    cfg = resolve_config("rule_match", (B, Rp, Ip), tuning)
+    bb = _fit(cfg.get("bb", 256), B)
+    br = _fit(cfg.get("br", 256), Rp)
+    bi = _fit(cfg.get("bi", 512), Ip)
     items, scores = _rule_topk(Q, A, sizes, conf, cons, n_items, k=k,
-                               backend=backend, interpret=interpret,
-                               bb=bb, br=br, bi=bi)
+                               backend=backend,
+                               variant=cfg.get("variant", "mxu"),
+                               interpret=interpret, bb=bb, br=br, bi=bi)
     return items[:B0], scores[:B0]
 
 

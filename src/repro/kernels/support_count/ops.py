@@ -1,14 +1,26 @@
-"""Jit'd public wrapper for the support-count kernel (handles padding and
-backend selection: Pallas-TPU on TPU, interpret-mode elsewhere)."""
+"""Jit'd public wrapper for the support-count kernel family (handles
+padding, backend selection and autotuned variant/tile dispatch).
+
+Two implementations compute the same counts bit-identically:
+
+* ``mxu``    — the int8-matmul kernel (:mod:`.kernel`): containment as a
+  systolic-array dot plus a VPU compare.
+* ``packed`` — the fused packed-popcount kernel (:mod:`.fused`): items
+  packed 32-per-uint32-word, containment + filter + count in one launch.
+
+Which one runs — and at what tile shape — comes from the autotune cache
+(:mod:`repro.kernels.autotune`) keyed by (kernel, shape-bucket, device
+kind); with no cache entry the roofline-seeded default applies.  Off-TPU
+both run in interpret mode (lowered to plain XLA ops), which is where
+the CI baselines hold the packed variant to *beating* the jitted ref.
+"""
 from __future__ import annotations
-
-import functools
-
-import numpy as np
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune.cache import resolve_config
+from repro.kernels.support_count.fused import support_count_fused
 from repro.kernels.support_count.kernel import support_count_pallas
 from repro.kernels.support_count.ref import support_count_ref
 
@@ -22,30 +34,45 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int):
     return jnp.pad(x, widths)
 
 
+def _fit(want: int, dim: int) -> int:
+    """Shrink a cached/heuristic tile until it divides the padded dim."""
+    t = max(1, min(int(want), dim))
+    while dim % t:
+        t //= 2
+    return max(t, 1)
+
+
 def support_count(T: jnp.ndarray, C: jnp.ndarray, *,
-                  interpret: bool | None = None) -> jnp.ndarray:
-    """Support counts [M] int32.  Pads N→8·, M→128·, I→128· as the kernel
-    requires; padded candidate rows have |c|=0 and are sliced away (a padded
+                  interpret: bool | None = None,
+                  tuning=None) -> jnp.ndarray:
+    """Support counts [M] int32.  Pads N→8·, M→128·, I→128· as the kernels
+    require; padded candidate rows have |c|=0 and are sliced away (a padded
     all-zero candidate would match every row, so we must slice, not rely on
-    zero counts)."""
+    zero counts).
+
+    ``tuning``: ``None`` = the checked-in autotune cache; ``False`` =
+    roofline-seeded default config; a config ``dict`` or an
+    ``AutotuneCache`` pins the choice (tests, the tuner, CI sweeps).
+    """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     N0, M0 = T.shape[0], C.shape[0]
+    if M0 == 0:          # empty candidate level: nothing to count
+        return jnp.zeros((0,), jnp.int32)
     T = _pad_to(_pad_to(T.astype(jnp.int8), 1, 128), 0, 8)
     C = _pad_to(_pad_to(C.astype(jnp.int8), 1, 128), 0, 128)
-    sizes = C.astype(jnp.float32).sum(axis=1)[None, :]          # [1, M]
-    bn = min(512, T.shape[0])
-    bm = min(256, C.shape[0])
-    bi = min(512, T.shape[1])
-    # grid-divisibility: shrink blocks to gcd-friendly sizes
-    while T.shape[0] % bn:
-        bn //= 2
-    while C.shape[0] % bm:
-        bm //= 2
-    while T.shape[1] % bi:
-        bi //= 2
-    out = support_count_pallas(T, C, sizes, bn=bn, bm=bm, bi=bi,
-                               interpret=interpret)
+    N, I = T.shape
+    M = C.shape[0]
+    cfg = resolve_config("support_count", (N, M, I), tuning)
+    bn = _fit(cfg.get("bn", 512), N)
+    bm = _fit(cfg.get("bm", 256), M)
+    if cfg.get("variant", "mxu") == "packed":
+        out = support_count_fused(T, C, bn=bn, bm=bm, interpret=interpret)
+    else:
+        sizes = C.astype(jnp.float32).sum(axis=1)[None, :]      # [1, M]
+        bi = _fit(cfg.get("bi", 512), I)
+        out = support_count_pallas(T, C, sizes, bn=bn, bm=bm, bi=bi,
+                                   interpret=interpret)
     counts = out[0, :M0]
     # padded transaction rows are all-zero: they can only match |c|=0 sets,
     # which do not occur among real candidates (Apriori starts at k=1).

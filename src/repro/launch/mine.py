@@ -41,7 +41,8 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          min_confidence: float = 0.6, profile_name: str = "paper",
          split: str = "lpt", n_tiles: int = 32, data_plane: str = "auto",
          seed: int = 0, top: int = 15, sharded: bool = False,
-         n_shards: int = 0, smoke: bool = False, policy: str = "static"):
+         n_shards: int = 0, smoke: bool = False, policy: str = "static",
+         autotune: bool = True):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 2048), min(n_items, 64)
 
@@ -49,7 +50,7 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
     config = PipelineConfig(min_support=min_support,
                             min_confidence=min_confidence,
                             n_tiles=n_tiles, policy=policy, split=split,
-                            data_plane=data_plane)
+                            data_plane=data_plane, autotune=autotune)
 
     if sharded:
         from repro.distributed.mining import (ShardedMiner, make_shard_mesh,
@@ -107,6 +108,11 @@ def main():
     ap.add_argument("--n-tiles", type=int, default=32)
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
+    ap.add_argument("--autotune", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="use the checked-in kernel winner cache for "
+                         "variant/tile selection (--no-autotune = "
+                         "roofline-seeded defaults)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sharded", action="store_true",
                     help="execute on the distributed mining plane (shard_map)")
@@ -124,7 +130,7 @@ def main():
     mine(args.n_tx, args.n_items, args.min_support, args.min_confidence,
          args.profile, args.split, args.n_tiles, args.data_plane, args.seed,
          sharded=args.sharded, n_shards=args.n_shards, smoke=args.smoke,
-         policy=args.policy)
+         policy=args.policy, autotune=args.autotune)
 
 
 if __name__ == "__main__":

@@ -45,7 +45,8 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
               data_plane: str = "auto", n_queries: int = 2048, k: int = 5,
               batch: int = 64, cache_size: int = 4096, seed: int = 0,
               mean_gap_s: float = 0.0, index_dir: str = "",
-              smoke: bool = False, top: int = 8, policy: str = "static"):
+              smoke: bool = False, top: int = 8, policy: str = "static",
+              autotune: bool = True):
     profile = PROFILES[profile_name]()
     basket_cfg = BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed)
 
@@ -53,7 +54,8 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
     pipe = MarketBasketPipeline(
         profile,
         PipelineConfig(min_support=min_support, min_confidence=min_confidence,
-                       policy=policy, split=split, data_plane=data_plane))
+                       policy=policy, split=split, data_plane=data_plane,
+                       autotune=autotune))
     result = pipe.run(generate_baskets(basket_cfg))
     print(f"[recommend] mined {len(result.rules)} rules from {n_tx} tx "
           f"({result.report.n_rounds} rounds, backend="
@@ -72,7 +74,8 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
     engine = RecommendationEngine(
         index, profile,
         ServingConfig(k=k, batch_buckets=buckets, data_plane=data_plane,
-                      cache_size=cache_size, policy=policy, split=split))
+                      cache_size=cache_size, policy=policy, split=split,
+                      autotune=autotune))
     queries, arrival = synthetic_trace(basket_cfg, n_queries, seed + 101,
                                        mean_gap_s)
     results, report = engine.serve(queries, arrival)
@@ -121,6 +124,11 @@ def main():
                     help="tile split strategy across the core profile")
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
+    ap.add_argument("--autotune", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="use the checked-in kernel winner cache for "
+                         "variant/tile selection (--no-autotune = "
+                         "roofline-seeded defaults)")
     ap.add_argument("--queries", type=int, default=2048)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--batch", type=int, default=64,
@@ -141,7 +149,8 @@ def main():
     recommend(args.n_tx, args.n_items, args.min_support, args.min_confidence,
               args.profile, args.split, args.data_plane, args.queries,
               args.k, args.batch, args.cache_size, args.seed, args.mean_gap_s,
-              args.index_dir, args.smoke, policy=args.policy)
+              args.index_dir, args.smoke, policy=args.policy,
+              autotune=args.autotune)
 
 
 if __name__ == "__main__":

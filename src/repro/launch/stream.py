@@ -38,7 +38,8 @@ def _run_stream(T: np.ndarray, cfg: StreamingConfig, profile_name: str,
     engine = RecommendationEngine(
         RuleIndex.build([], n_items), PROFILES[profile_name](),
         ServingConfig(k=min(serve_k, n_items), data_plane=cfg.data_plane,
-                      policy=policy, split=cfg.split))
+                      policy=policy, split=cfg.split,
+                      autotune=cfg.autotune))
     miner = StreamingMiner(n_items, profile=profile, config=cfg,
                            engine=engine, policy=policy)
     report = miner.run(TransactionStream(T, cfg.batch_size),
@@ -53,7 +54,7 @@ def stream(n_tx: int = 8192, n_items: int = 128, window: int = 2048,
            data_plane: str = "auto", n_tiles: int = 8,
            refresh_every: int = 1, revalidate_every: int = 0,
            serve_k: int = 5, seed: int = 0, top: int = 10,
-           smoke: bool = False):
+           smoke: bool = False, autotune: bool = True):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 1536), min(n_items, 48)
         window, batch = min(window, 512), min(batch, 64)
@@ -80,7 +81,7 @@ def stream(n_tx: int = 8192, n_items: int = 128, window: int = 2048,
                           min_support=min_support,
                           min_confidence=min_confidence, n_tiles=n_tiles,
                           policy=policy, split=split, data_plane=data_plane,
-                          refresh_every=refresh_every,
+                          autotune=autotune, refresh_every=refresh_every,
                           revalidate_every=revalidate_every)
 
     # smoke checks every policy the paper contrasts; a plain run honors
@@ -157,6 +158,11 @@ def main():
                     choices=["lpt", "proportional", "equal"])
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
+    ap.add_argument("--autotune", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="use the checked-in kernel winner cache for "
+                         "variant/tile selection (--no-autotune = "
+                         "roofline-seeded defaults)")
     ap.add_argument("--n-tiles", type=int, default=8,
                     help="map tiles for full re-validation passes")
     ap.add_argument("--refresh-every", type=int, default=1,
@@ -178,7 +184,8 @@ def main():
                args.batches, args.min_support, args.min_confidence,
                args.profile, args.policy, args.split, args.data_plane,
                args.n_tiles, args.refresh_every, args.revalidate_every,
-               args.serve_k, args.seed, smoke=args.smoke)
+               args.serve_k, args.seed, smoke=args.smoke,
+               autotune=args.autotune)
     except AssertionError as e:
         print(f"[stream] SMOKE FAILED: {e}", file=sys.stderr)
         raise SystemExit(1)

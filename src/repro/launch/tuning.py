@@ -1,6 +1,7 @@
-"""Per-cell performance configuration (the §Perf levers).
+"""Per-cell performance configuration (the §Perf levers) and the
+roofline-seeded kernel tile spaces the autotuner sweeps.
 
-Two profiles:
+Model-cell profiles (``cell_config``):
 
 * ``baseline`` — the paper-faithful starting point: stock XLA attention
   (naive scores where they physically fit, chunked where an S² tensor could
@@ -9,13 +10,24 @@ Two profiles:
   EXPERIMENTS.md §Perf (chunked/online-softmax attention, chunked vocab
   loss for ≥100k vocabs, remat policy, grad-accum, MoE capacity).
 
-Every entry may override ModelConfig fields and set ``grad_accum``.
+Kernel tuning seeds (``kernel_candidates`` / ``estimate_cost_us`` /
+``default_config``): the config spaces for the Apriori hot-loop kernels
+(``support_count``, ``rule_match``) — each candidate names an
+implementation *variant* (``mxu`` int8-matmul vs ``packed``
+AND-popcount on uint32 words) plus its tile shape — and a roofline cost
+model over :mod:`repro.launch.roofline` constants that orders the sweep
+and supplies the cold-cache default: when
+:mod:`repro.kernels.autotune` has no measurement for a (kernel,
+shape-bucket, device), the argmin of the *estimated* costs is used, so a
+missing or corrupt cache degrades to roofline-seeded defaults instead of
+erroring.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Tuple
 
 from repro.configs.base import ModelConfig
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 _BIG_VOCAB = 100_000
 
@@ -83,3 +95,115 @@ def cell_config(cfg: ModelConfig, shape_name: str, profile: str
     # 0.0490 dense vs 0.0467 chunked.  The lever stays available
     # (`vocab_loss_chunk`) for configs where logits don't fit; see §Perf.
     return cfg.replace(**over), opts
+
+
+# ---------------------------------------------------------------------------
+# Kernel autotuning seeds (support_count / rule_match tile spaces)
+# ---------------------------------------------------------------------------
+
+# VPU-flavored throughput for the packed popcount path: the AND + popcount
+# + add word ops run on the vector unit, not the systolic array, at roughly
+# an eighth of the MXU's MAC rate per the v5e datapath width.
+VPU_OPS = PEAK_FLOPS / 8.0
+# Ops per packed word-pair: AND, popcount, accumulate.
+_PACKED_OPS_PER_WORD = 3.0
+# Fixed cost per grid step (launch + block DMA setup): what makes small
+# tiles expensive in the estimate, so the seed order prefers few launches
+# until the working set forces tiling.
+KERNEL_STEP_OVERHEAD_US = 15.0
+
+TUNABLE_KERNELS = ("support_count", "rule_match")
+
+
+def _fit_tile(want: int, dim: int, floor: int = 1) -> int:
+    """Largest power-of-two-shrunk tile <= want that divides dim."""
+    t = max(floor, min(want, dim))
+    while dim % t:
+        t //= 2
+    return max(t, 1)
+
+
+def kernel_candidates(kernel: str, shape: Tuple[int, ...]
+                      ) -> List[Dict[str, Any]]:
+    """The swept config space for one kernel at one (padded) shape.
+
+    support_count: shape = (N, M, I) — transactions, candidates, items.
+    rule_match:    shape = (B, R, I) — queries, rule rows, items.
+    Every candidate is a dict with a ``variant`` plus that variant's tile
+    shape; all candidates compute bit-identical results (the fuzz harness
+    holds the tuner to that), so picking any of them is safe.
+    """
+    if kernel not in TUNABLE_KERNELS:
+        raise ValueError(f"unknown tunable kernel {kernel!r} "
+                         f"(known: {', '.join(TUNABLE_KERNELS)})")
+    n, m, i = shape
+    cands: List[Dict[str, Any]] = []
+    seen = set()
+
+    def add(cfg: Dict[str, Any]) -> None:
+        key = tuple(sorted(cfg.items()))
+        if key not in seen:
+            seen.add(key)
+            cands.append(cfg)
+
+    a, b = ("bn", "bm") if kernel == "support_count" else ("bb", "br")
+    for wn in (512, 256, n):
+        for wm in (256, 128, m):
+            add({"variant": "mxu", a: _fit_tile(wn, n), b: _fit_tile(wm, m),
+                 "bi": _fit_tile(512, i)})
+            add({"variant": "packed", a: _fit_tile(wn, n),
+                 b: _fit_tile(wm, m)})
+    return cands
+
+
+def estimate_cost_us(kernel: str, shape: Tuple[int, ...],
+                     config: Dict[str, Any]) -> float:
+    """Roofline-seeded cost estimate (µs) for one candidate config.
+
+    max(compute, HBM traffic) over the v5e constants plus a per-grid-step
+    launch overhead; traffic counts the block re-reads tiling implies
+    (T/Q re-read once per candidate tile, C/A once per row tile).
+    """
+    n, m, i = shape
+    a, b = ("bn", "bm") if kernel == "support_count" else ("bb", "br")
+    tn, tm = config[a], config[b]
+    steps_n, steps_m = n // tn, m // tm
+    if config["variant"] == "mxu":
+        ti = config.get("bi", i)
+        steps = steps_n * steps_m * (i // ti)
+        compute_s = 2.0 * n * m * i / PEAK_FLOPS
+        traffic = n * i * steps_m + m * i * steps_n + 4.0 * m * steps_n
+    else:
+        w = i / 32.0
+        steps = steps_n * steps_m
+        compute_s = _PACKED_OPS_PER_WORD * n * m * w / VPU_OPS
+        traffic = 4.0 * (n * w * steps_m + m * w * steps_n + m * steps_n)
+    return (max(compute_s, traffic / HBM_BW) * 1e6
+            + steps * KERNEL_STEP_OVERHEAD_US)
+
+
+def default_config(kernel: str, shape: Tuple[int, ...]) -> Dict[str, Any]:
+    """Cold-cache fallback: argmin of the roofline estimates (no
+    measurement, deterministic — ties broken by the candidate order)."""
+    cands = kernel_candidates(kernel, shape)
+    return min(cands, key=lambda c: (estimate_cost_us(kernel, shape, c),
+                                     sorted(c.items()).__repr__()))
+
+
+def seed_order(kernel: str, shape: Tuple[int, ...],
+               cands: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """Sweep order: cheapest estimate first, so a truncated (smoke) sweep
+    still measures the configs the roofline model believes in."""
+    return sorted(cands, key=lambda c: estimate_cost_us(kernel, shape, c))
+
+
+def shape_flops_bytes(kernel: str, shape: Tuple[int, ...]
+                      ) -> Tuple[float, float]:
+    """Task-intrinsic (flops, bytes) for one kernel shape — the variant-
+    independent work the containment test costs, used to turn a measured
+    wall into effective peak/bandwidth for CostModelPolicy seeding."""
+    n, m, i = shape
+    flops = 2.0 * n * m * i
+    bytes_ = float(n * i + m * i + 4 * m + (4 * n * m
+                                            if kernel == "rule_match" else 0))
+    return flops, bytes_

@@ -76,13 +76,16 @@ class DataPlane:
     """
 
     def __init__(self, kind: str = "auto", m_bucket: int = 128,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None, tuning=None):
         if m_bucket <= 0 or m_bucket % 128:
             raise ValueError(
                 "m_bucket must be a positive multiple of 128 (kernel lanes)")
         self.backend = resolve_backend(kind)
         self.m_bucket = m_bucket
         self.interpret = interpret
+        # None = the checked-in autotune cache picks variant + tiles;
+        # False = roofline defaults; dict/AutotuneCache pin the choice
+        self.tuning = tuning
         self._C: Optional[jnp.ndarray] = None
         self._m_true = 0
 
@@ -101,7 +104,8 @@ class DataPlane:
         assert self._C is not None, "prepare() before tile_counts()"
         Tj = jnp.asarray(tile)
         if self.backend == "pallas":
-            out = _pallas_count(Tj, self._C, interpret=self.interpret)
+            out = _pallas_count(Tj, self._C, interpret=self.interpret,
+                                tuning=self.tuning)
         else:
             out = _jitted_ref(Tj, self._C)
         return np.asarray(out[:self._m_true], dtype=np.int64)

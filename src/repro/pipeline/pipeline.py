@@ -42,7 +42,8 @@ from repro.core.rules import Rule, generate_rules
 from repro.data.baskets import pack_transactions, pad_items
 from repro.pipeline.dataplane import DataPlane, uniform_tiles
 from repro.pipeline.report import PipelineReport, RoundReport
-from repro.runtime import MeasuredPhase, Runtime, SwitchingPolicy
+from repro.runtime import (MeasuredPhase, Runtime, SwitchingPolicy,
+                           autotuned_costmodel)
 
 Baskets = Union[np.ndarray, Sequence[Sequence[int]]]
 
@@ -85,6 +86,11 @@ class PipelineConfig:
     data_plane: str = "auto"        # auto | pallas | ref
     m_bucket: int = 128             # candidate-batch rounding (kernel lanes)
     interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
+    # Kernel autotuning: True = the checked-in winner cache picks the
+    # Pallas variant + tile shapes (and, under the costmodel policy, its
+    # measured walls replace the datasheet roofline constants); False =
+    # roofline-seeded defaults everywhere.
+    autotune: bool = True
     power: str = "cpu"              # cpu | tpu_v5e | none
     speculate: bool = True
     # Serial-phase cost model: work units charged per (itemset, level) pair
@@ -141,19 +147,25 @@ class MarketBasketPipeline:
                  policy: Union[str, SwitchingPolicy, None] = None):
         self.profile = profile or HeterogeneityProfile.paper()
         self.config = config or PipelineConfig()
+        cfg = self.config
+        policy = policy if policy is not None else cfg.policy
+        if policy == "costmodel" and cfg.autotune:
+            # measured kernel walls replace the datasheet constants
+            policy = autotuned_costmodel("support_count")
         self.runtime = Runtime(
             self.profile,
-            policy=policy if policy is not None else self.config.policy,
-            split=self.config.split,
-            power=power if power is not None else self.config.power,
+            policy=policy,
+            split=cfg.split,
+            power=power if power is not None else cfg.power,
             scheduler=scheduler)
         self.scheduler = self.runtime.scheduler
         self.power = self.runtime.power
         self.cluster = SimulatedCluster(self.profile, self.scheduler,
                                         power=None)  # ledger prices energy
-        self.data_plane = DataPlane(self.config.data_plane,
-                                    m_bucket=self.config.m_bucket,
-                                    interpret=self.config.interpret)
+        self.data_plane = DataPlane(cfg.data_plane,
+                                    m_bucket=cfg.m_bucket,
+                                    interpret=cfg.interpret,
+                                    tuning=None if cfg.autotune else False)
 
     # ------------------------------------------------------------------
     # phases

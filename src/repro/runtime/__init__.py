@@ -4,11 +4,13 @@ switching policies (paper §VI)."""
 from repro.runtime.ledger import ExecLedger, PhaseRecord
 from repro.runtime.policies import (POLICY_NAMES, CostModelPolicy,
                                     DynamicPolicy, StaticPolicy,
-                                    SwitchingPolicy, resolve_policy)
+                                    SwitchingPolicy, autotuned_costmodel,
+                                    resolve_policy)
 from repro.runtime.runtime import MeasuredPhase, Runtime, resolve_power
 
 __all__ = [
     "POLICY_NAMES", "CostModelPolicy", "DynamicPolicy", "ExecLedger",
     "MeasuredPhase", "PhaseRecord", "Runtime", "StaticPolicy",
-    "SwitchingPolicy", "resolve_policy", "resolve_power",
+    "SwitchingPolicy", "autotuned_costmodel", "resolve_policy",
+    "resolve_power",
 ]

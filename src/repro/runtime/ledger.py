@@ -37,6 +37,8 @@ class PhaseRecord:
     name: str
     kind: str                     # "serial" | "map"
     policy: str = "static"        # switching policy that planned the phase
+    cost_source: str = "bytes"    # where planning costs came from:
+    #                               bytes | roofline | autotune
     cost: float = 0.0             # work units the scheduler planned for
     sim_time_s: float = 0.0       # serial run time / map makespan (modeled)
     host_time_s: float = 0.0      # measured host wall (0 = not measured)

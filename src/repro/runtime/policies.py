@@ -36,6 +36,10 @@ class SwitchingPolicy:
     """Interface: cost seeding, phase planning, post-phase feedback."""
 
     name = "abstract"
+    # where this policy's planning costs come from — stamped onto every
+    # PhaseRecord so a ledger reader can tell constant-seeded plans from
+    # roofline- or autotune-fed ones ("bytes" = the raw byte estimates)
+    cost_source = "bytes"
 
     # -- cost seeding ---------------------------------------------------
     def tile_costs(self, runtime, task: TaskSpec, tile_costs: np.ndarray,
@@ -158,9 +162,16 @@ class CostModelPolicy(StaticPolicy):
     ``flops_per_byte`` (e.g. derived from a compiled module via
     :meth:`from_hlo`) is applied uniformly — which degenerates to the
     byte seeding, exactly as it should when no intensity skew is known.
+
+    Peak/bandwidth default to the datasheet roofline constants
+    (``cost_source = "roofline"``); :meth:`from_autotune` replaces them
+    with *measured* effective rates from an autotune cache
+    (``cost_source = "autotune"`` — the tentpole feedback loop: the
+    scheduler plans on what the silicon actually did, not on constants).
     """
 
     name = "costmodel"
+    cost_source = "roofline"
 
     def __init__(self, peak_flops: Optional[float] = None,
                  hbm_bw: Optional[float] = None,
@@ -177,6 +188,41 @@ class CostModelPolicy(StaticPolicy):
         cost = analyze(hlo_text)
         fpb = cost.flops / max(cost.traffic_bytes, 1.0)
         return cls(flops_per_byte=fpb, **kwargs)
+
+    @classmethod
+    def from_autotune(cls, cache, kernel: str,
+                      device: Optional[str] = None,
+                      **kwargs) -> "CostModelPolicy":
+        """Seed effective peak/bandwidth from measured autotune entries.
+
+        Each cache entry carries the shape it was tuned at and the
+        winner's measured wall; the task-intrinsic (flops, bytes) of that
+        shape (``launch.tuning.shape_flops_bytes``) turn the wall into an
+        achieved flops/s and bytes/s — the median over entries replaces
+        the datasheet constants, and the median arithmetic intensity
+        seeds ``flops_per_byte``.  Raises ``ValueError`` when the cache
+        has no measured entries for this (kernel, device): the caller
+        decides whether to fall back to constants, never silently.
+        """
+        from repro.launch.tuning import shape_flops_bytes
+        entries = [e for e in cache.entries_for(kernel, device)
+                   if e.get("cost_us", 0) > 0 and e.get("shape")]
+        if not entries:
+            raise ValueError(
+                f"autotune cache has no measured entries for {kernel!r} on "
+                f"device {device or 'current'} — cannot seed measured costs")
+        peaks, bws, intens = [], [], []
+        for e in entries:
+            flops, bytes_ = shape_flops_bytes(kernel, tuple(e["shape"]))
+            wall_s = float(e["cost_us"]) * 1e-6
+            peaks.append(flops / wall_s)
+            bws.append(bytes_ / wall_s)
+            intens.append(flops / bytes_)
+        policy = cls(peak_flops=float(np.median(peaks)),
+                     hbm_bw=float(np.median(bws)),
+                     flops_per_byte=float(np.median(intens)), **kwargs)
+        policy.cost_source = "autotune"
+        return policy
 
     def tile_costs(self, runtime, task, tile_costs, tile_flops=None):
         bytes_ = np.asarray(tile_costs, dtype=np.float64)
@@ -195,6 +241,24 @@ class CostModelPolicy(StaticPolicy):
         # renormalize to the byte work-unit scale: same total work,
         # redistributed by roofline intensity
         return roofline_s * (total / rs)
+
+
+def autotuned_costmodel(kernel: str, cache=None) -> CostModelPolicy:
+    """Costmodel policy seeded from the autotune cache when it can be.
+
+    The planes call this when their config asks for the ``costmodel``
+    policy by name with autotuning on: measured entries for *kernel* on
+    the current device replace the datasheet constants
+    (``cost_source = "autotune"``); a cold/corrupt/other-device cache
+    degrades to the roofline-constant policy — autotuning may only make
+    planning better-informed, never take a plane down."""
+    if cache is None:
+        from repro.kernels.autotune.cache import default_cache
+        cache = default_cache()
+    try:
+        return CostModelPolicy.from_autotune(cache, kernel)
+    except ValueError:
+        return CostModelPolicy()
 
 
 _POLICIES = {

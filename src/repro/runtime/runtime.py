@@ -111,7 +111,9 @@ class Runtime:
         if self.power is not None:
             energy = self.power.energy(busy, sim_t, gated=asg.gated)
         rec = self.ledger.add(PhaseRecord(
-            name=name, kind="serial", policy=self.policy.name, cost=cost,
+            name=name, kind="serial", policy=self.policy.name,
+            cost_source=getattr(self.policy, "cost_source", "bytes"),
+            cost=cost,
             sim_time_s=sim_t, host_time_s=host_t, energy_j=energy,
             busy_s=[float(b) for b in busy], gated=list(asg.gated),
             device=dev, constraint_violated=asg.constraint_violated))
@@ -187,6 +189,7 @@ class Runtime:
 
         rec = self.ledger.add(PhaseRecord(
             name=task.name, kind="map", policy=self.policy.name,
+            cost_source=getattr(self.policy, "cost_source", "bytes"),
             cost=task.cost, sim_time_s=makespan,
             host_time_s=measured.wall_s, energy_j=energy,
             switches=switches, reissued=reissued,

@@ -43,7 +43,8 @@ from repro.core.power import PowerModel
 from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.kernels.rule_match.ops import rule_topk
 from repro.pipeline.dataplane import resolve_backend
-from repro.runtime import ExecLedger, MeasuredPhase, Runtime, SwitchingPolicy
+from repro.runtime import (ExecLedger, MeasuredPhase, Runtime,
+                           SwitchingPolicy, autotuned_costmodel)
 from repro.serving.cache import Recommendation, ResultCache, basket_key
 from repro.serving.index import RuleIndex
 
@@ -58,6 +59,10 @@ class ServingConfig:
     batch_buckets: Tuple[int, ...] = (1, 8, 64)   # admission coalescing sizes
     data_plane: str = "auto"        # auto | pallas | ref
     interpret: Optional[bool] = None  # force Pallas interpret mode (tests)
+    # Kernel autotuning: True = the checked-in winner cache picks the
+    # rule-match variant + tile shapes (and, under the costmodel policy,
+    # its measured walls replace the roofline constants); False = defaults.
+    autotune: bool = True
     cache_size: int = 4096          # LRU entries; 0 disables caching
     policy: str = "static"          # switching: static | dynamic | costmodel
     split: str = "lpt"              # tile split for the scoring phase
@@ -153,9 +158,13 @@ class RecommendationEngine:
             raise ValueError(f"k={cfg.k} must be in [1, n_items="
                              f"{index.n_items}]")
         self.profile = profile or HeterogeneityProfile.paper()
+        policy = policy if policy is not None else cfg.policy
+        if policy == "costmodel" and cfg.autotune:
+            # measured kernel walls replace the datasheet constants
+            policy = autotuned_costmodel("rule_match")
         self.runtime = Runtime(
             self.profile,
-            policy=policy if policy is not None else cfg.policy,
+            policy=policy,
             split=cfg.split,
             power=power if power is not None else cfg.power,
             scheduler=scheduler)
@@ -226,7 +235,8 @@ class RecommendationEngine:
         items, scores = rule_topk(
             Q, self._dev["ante"], self._dev["sizes"], self._dev["conf"],
             self._dev["cons"], k=cfg.k, n_items=self.index.n_items,
-            backend=self.backend, interpret=cfg.interpret)
+            backend=self.backend, interpret=cfg.interpret,
+            tuning=None if cfg.autotune else False)
         items = np.asarray(items)
         scores = np.asarray(scores)
         return [[(int(i), float(s)) for i, s in zip(items[r], scores[r])

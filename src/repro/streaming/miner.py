@@ -63,7 +63,7 @@ from repro.pipeline.dataplane import DataPlane, uniform_tiles
 from repro.pipeline.pipeline import (PipelineConfig, candgen_cost,
                                      support_flops)
 from repro.runtime import (ExecLedger, MeasuredPhase, Runtime,
-                           SwitchingPolicy)
+                           SwitchingPolicy, autotuned_costmodel)
 from repro.serving.engine import RecommendationEngine
 from repro.serving.index import RuleIndex
 from repro.streaming.source import SlidingWindow
@@ -98,6 +98,7 @@ class StreamingConfig:
     data_plane: str = "auto"        # auto | pallas | ref
     m_bucket: int = 128             # candidate-batch rounding (kernel lanes)
     interpret: Optional[bool] = None
+    autotune: bool = True           # kernel winner cache on (see PipelineConfig)
     power: str = "cpu"              # cpu | tpu_v5e | none
     refresh_every: int = 1          # batches between rule/index refreshes
     revalidate_every: int = 0       # 0 = only when the lattice can change
@@ -114,7 +115,8 @@ class StreamingConfig:
                   min_lift=self.min_lift, max_k=self.max_k,
                   n_tiles=self.n_tiles, policy=self.policy, split=self.split,
                   data_plane=self.data_plane, m_bucket=self.m_bucket,
-                  interpret=self.interpret, power=self.power,
+                  interpret=self.interpret, autotune=self.autotune,
+                  power=self.power,
                   serial_unit_cost=self.serial_unit_cost,
                   serial_min_speed=self.serial_min_speed)
         kw.update(overrides)
@@ -242,15 +244,20 @@ class StreamingMiner:
         self.profile = profile or HeterogeneityProfile.paper()
         self.config = config or StreamingConfig()
         cfg = self.config
+        policy = policy if policy is not None else cfg.policy
+        if policy == "costmodel" and cfg.autotune:
+            # measured kernel walls replace the datasheet constants
+            policy = autotuned_costmodel("support_count")
         self.runtime = Runtime(
             self.profile,
-            policy=policy if policy is not None else cfg.policy,
+            policy=policy,
             split=cfg.split,
             power=power if power is not None else cfg.power,
             scheduler=scheduler)
         self.scheduler = self.runtime.scheduler
         self.data_plane = DataPlane(cfg.data_plane, m_bucket=cfg.m_bucket,
-                                    interpret=cfg.interpret)
+                                    interpret=cfg.interpret,
+                                    tuning=None if cfg.autotune else False)
         self.window = SlidingWindow(cfg.window, n_items)
         self.engine = engine
 
