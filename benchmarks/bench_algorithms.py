@@ -1,0 +1,86 @@
+"""B11 — algorithm selection: Apriori vs Eclat vs the auto cost model.
+
+The same mining job runs under all three ``PipelineConfig.algorithm``
+values on a dense IBM-Quest bitmap, plus Eclat on a wide-universe sparse
+corpus fed through the CSR slab (the vertical path packs tid-columns from
+the slab directly — the dense bitmap is never built).  Measured like B6's
+data-plane rows: warm every miner first, interleave the reps so clock
+drift hits all arms equally, report the median.
+
+Rows:
+  algorithms_apriori_dense_wall   derived = n_itemsets
+  algorithms_eclat_dense_wall     derived = n_itemsets
+  algorithms_auto_dense_wall      derived = n_itemsets
+  algorithms_eclat_sparse_wall    derived = n_itemsets
+  algorithms_auto_pick_eclat      derived = 1.0 if auto chose eclat
+
+Gates (baselines.json rules):
+  strictly_faster [eclat_dense, apriori_dense] — the vertical plane must
+      beat the horizontal one on the dense corpus, same run, no noise
+      factor;
+  auto_within [auto_dense, [apriori_dense, eclat_dense], 1.1] — the auto
+      router may never cost more than 1.1x the best explicit choice (its
+      overhead is one density scan + a cost-model evaluation).
+"""
+import time
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
+from repro.data.sparse import SparseSlab
+from repro.mining import make_miner
+from repro.pipeline import PipelineConfig
+
+REPS = 3
+
+
+def _config(algorithm, min_support=0.02):
+    return PipelineConfig(min_support=min_support, n_tiles=16,
+                          algorithm=algorithm)
+
+
+def run(csv_rows):
+    profile = HeterogeneityProfile.paper()
+
+    # dense corpus: all three algorithm values on identical data
+    T = generate_baskets(BasketConfig(n_tx=8192, n_items=96, seed=3))
+    miners, walls, itemsets = {}, {}, {}
+    auto_choice = None
+    for name in ("apriori", "eclat", "auto"):
+        miner, choice = make_miner(T, profile=profile,
+                                   config=_config(name))
+        if name == "auto":
+            auto_choice = choice
+        miners[name] = miner
+        miner.run(T)                      # warm the jit caches
+        walls[name] = []
+    for _ in range(REPS):
+        for name, miner in miners.items():
+            t0 = time.perf_counter()
+            res = miner.run(T)
+            walls[name].append((time.perf_counter() - t0) * 1e6)
+            itemsets[name] = res.report.n_itemsets
+    assert itemsets["apriori"] == itemsets["eclat"] == itemsets["auto"], \
+        "algorithm backends disagree on the dense corpus"
+    for name in ("apriori", "eclat", "auto"):
+        csv_rows.append((f"algorithms_{name}_dense_wall",
+                         float(np.median(walls[name])), itemsets[name]))
+    csv_rows.append(("algorithms_auto_pick_eclat", 0.0,
+                     1.0 if (auto_choice is not None and
+                             auto_choice.algorithm == "eclat") else 0.0))
+
+    # sparse corpus through the CSR slab: the Eclat path scatters packed
+    # tid-columns straight out of the slab, never the dense bitmap
+    slab = SparseSlab.from_baskets(
+        sparse_baskets(4096, 512, seed=3, max_item_freq=0.03), n_items=512)
+    miner, _ = make_miner(slab, profile=profile,
+                          config=_config("eclat", min_support=0.01))
+    miner.run(slab)
+    sparse_walls = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        res = miner.run(slab)
+        sparse_walls.append((time.perf_counter() - t0) * 1e6)
+    csv_rows.append(("algorithms_eclat_sparse_wall",
+                     float(np.median(sparse_walls)), res.report.n_itemsets))

@@ -16,6 +16,10 @@
   B10 bench_streaming      — streaming plane (incremental delta-update vs
                              from-scratch re-mine per micro-batch;
                              rule-refresh-to-visible latency)
+  B11 bench_algorithms     — apriori vs eclat vs auto cost-model routing
+                             (dense + sparse-slab corpora; the
+                             eclat-beats-apriori-on-dense and
+                             auto-within-1.1x gates)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -34,9 +38,9 @@ import json
 import os
 import sys
 
-from benchmarks import (bench_apriori, bench_kernels, bench_pipeline,
-                        bench_policies, bench_power, bench_roofline,
-                        bench_scheduler, bench_serving,
+from benchmarks import (bench_algorithms, bench_apriori, bench_kernels,
+                        bench_pipeline, bench_policies, bench_power,
+                        bench_roofline, bench_scheduler, bench_serving,
                         bench_sharded_mining, bench_streaming)
 
 SUITES = {
@@ -50,6 +54,7 @@ SUITES = {
     "B8": ("sharded_mining", bench_sharded_mining.run),
     "B9": ("policies", bench_policies.run),
     "B10": ("streaming", bench_streaming.run),
+    "B11": ("algorithms", bench_algorithms.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
@@ -103,6 +108,15 @@ def _check_baselines(path, rows, factor, suite_names):
             regressed.append(
                 f"{fast}: {walls[fast]:.2f}us must be strictly faster "
                 f"than {slow}: {walls[slow]:.2f}us")
+    # auto_within rules: [row, [candidates...], factor] — a router row may
+    # cost at most factor x the best candidate measured in the same run
+    # (the algorithm auto-selection overhead gate)
+    for row, cands, limit in data.get("rules", {}).get("auto_within", []):
+        have = [walls[c] for c in cands if c in walls]
+        if row in walls and have and walls[row] > limit * min(have):
+            regressed.append(
+                f"{row}: {walls[row]:.2f}us exceeds {limit:.1f}x the best "
+                f"explicit choice ({min(have):.2f}us)")
     if unknown:
         print(f"# baseline has no entry for {len(unknown)} row(s) "
               f"(not gated): {', '.join(unknown)} — refresh with "

@@ -68,6 +68,37 @@ def stationary_baskets(n_tx: int, n_items: int, n_patterns: int = 6,
     return T
 
 
+def sparse_baskets(n_tx: int, n_items: int, basket_len: int = 8,
+                   max_item_freq: float = 0.01, n_patterns: int = 20,
+                   pattern_len: int = 3, seed: int = 0
+                   ) -> List[List[int]]:
+    """A wide-universe, low-frequency corpus (SNIPPET 2's retail regime:
+    1559 items, 0.42% max item frequency) as raw id lists — the input the
+    sparse slab path consumes *without* ever building the dense bitmap.
+
+    Each transaction draws one of ``n_patterns`` correlated patterns with
+    probability ``max_item_freq * n_patterns`` (a uniform pattern choice
+    then caps every pattern item's frequency near ``max_item_freq``) plus
+    ``basket_len`` uniform noise items from the full universe, whose
+    individual frequencies sit near ``basket_len / n_items`` — far below
+    the cap for production-sized universes.
+    """
+    if n_patterns * pattern_len > n_items:
+        raise ValueError(f"{n_patterns} patterns of length {pattern_len} "
+                         f"do not fit in a {n_items}-item universe")
+    rng = np.random.default_rng(seed)
+    ids = rng.permutation(n_items)[:n_patterns * pattern_len]
+    patterns = ids.reshape(n_patterns, pattern_len)
+    p_pattern = min(max_item_freq * n_patterns, 1.0)
+    baskets: List[List[int]] = []
+    for _ in range(n_tx):
+        tx = set(rng.choice(n_items, size=basket_len, replace=False).tolist())
+        if rng.random() < p_pattern:
+            tx.update(patterns[rng.integers(n_patterns)].tolist())
+        baskets.append(sorted(tx))
+    return baskets
+
+
 def pack_transactions(transactions: Sequence[Sequence[int]],
                       n_items: Optional[int] = None) -> np.ndarray:
     """Pack variable-length transactions (sequences of item ids) into the

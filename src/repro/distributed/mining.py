@@ -44,6 +44,7 @@ from repro.core.itemsets import (AprioriResult, generate_candidates,
 from repro.core.power import PowerModel
 from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.data.sharding import plan_shard_rows
+from repro.data.sparse import SparseSlab, density_stats
 from repro.distributed.fault import FaultPlan
 from repro.kernels.support_count.ref import support_count_ref
 from repro.pipeline.dataplane import pad_candidates, resolve_backend
@@ -173,6 +174,29 @@ def _support_map_pallas(shard, C):
     return support_count(shard, C)
 
 
+def _eclat_item_counts_map(shard):
+    """shard: [width, n_items] word-major packed tid matrix (uint32) —
+    per-item counts are plain column popcount sums; padding words are 0."""
+    return jnp.sum(jax.lax.population_count(shard).astype(jnp.int32), axis=0)
+
+
+def _eclat_support_map(shard, Cidx):
+    """Stateless k-way AND over base item columns, per shard.
+
+    ``Cidx [M, k] int32`` holds each candidate's item ids.  Unlike the
+    single-device Eclat plane's pairwise (k-1)-slab cascade, the sharded
+    round recomputes each candidate's tidset from the *base* columns —
+    carrying per-rank intermediate slabs through shard re-plans would
+    couple the fault path to mining state; k is small (≤ a handful of
+    levels) so the extra ANDs are cheap and every round stays a pure
+    function of (data, Cidx).  Both formulations count identical bits.
+    """
+    g = jnp.take(shard, Cidx[:, 0], axis=1)            # [width, M]
+    for j in range(1, Cidx.shape[1]):                  # k is static
+        g = g & jnp.take(shard, Cidx[:, j], axis=1)
+    return jnp.sum(jax.lax.population_count(g).astype(jnp.int32), axis=0)
+
+
 # ---------------------------------------------------------------------------
 # the miner
 # ---------------------------------------------------------------------------
@@ -203,8 +227,11 @@ class ShardedMiner:
         self.config = config or PipelineConfig()
         policy = policy if policy is not None else self.config.policy
         if policy == "costmodel" and self.config.autotune:
-            # measured kernel walls replace the datasheet constants
-            policy = autotuned_costmodel("support_count")
+            # measured kernel walls replace the datasheet constants (the
+            # kernel the chosen formulation actually dispatches to)
+            policy = autotuned_costmodel(
+                "intersect_count" if self.config.algorithm == "eclat"
+                else "support_count")
         self.runtime = Runtime(
             self.profile,
             policy=policy,
@@ -220,6 +247,10 @@ class ShardedMiner:
         # whenever a later round (or run) repeats a batch shape
         self._item_jobs: dict = {}
         self._support_jobs: dict = {}
+        self._eclat_jobs: dict = {}
+        # the auto-selector's decision for the last run() (None when the
+        # algorithm was explicit) — the CLI surfaces it
+        self.algorithm_choice = None
 
     # ------------------------------------------------------------------
     def _item_job(self, n_items: int) -> MapReduceJob:
@@ -244,6 +275,20 @@ class ShardedMiner:
                 combine_fn=lambda a, b: a + b,
                 zero_fn=lambda m=m_padded: jnp.zeros(m, jnp.int32))
             self._support_jobs[m_padded] = job
+        return job
+
+    def _eclat_job(self, m_padded: int, k: int) -> MapReduceJob:
+        """One job per (candidate bucket, level arity): the k-way AND body
+        specializes on Cidx's static column count."""
+        job = self._eclat_jobs.get((m_padded, k))
+        if job is None:
+            job = MapReduceJob(
+                name=f"eclat-sharded-intersect-m{m_padded}-k{k}",
+                map_fn=(_eclat_item_counts_map if k == 1
+                        else _eclat_support_map),
+                combine_fn=lambda a, b: a + b,
+                zero_fn=lambda m=m_padded: jnp.zeros(m, jnp.int32))
+            self._eclat_jobs[(m_padded, k)] = job
         return job
 
     # ------------------------------------------------------------------
@@ -276,12 +321,17 @@ class ShardedMiner:
     # ------------------------------------------------------------------
     def _apply_faults(self, k: int, faults: Optional[FaultPlan],
                       alive: np.ndarray, plan: ShardPlan, T: np.ndarray,
-                      report: PipelineReport
+                      report: PipelineReport,
+                      row_block: Optional[int] = None
                       ) -> Tuple[ShardPlan, Optional[jnp.ndarray],
                                  int, int, List[int]]:
         """Consume round-k fault events; returns the (possibly new) plan,
         re-laid-out device data (or None if unchanged), and this round's
-        (switches, reissued, newly_dead)."""
+        (switches, reissued, newly_dead).  ``T`` is whatever row matrix
+        the plane shards (transaction rows for Apriori, packed tid words
+        for Eclat — ``row_block`` overrides the transaction-row blocking
+        for the latter, where one row already covers 32 transactions)."""
+        row_block = self.row_block if row_block is None else row_block
         events = faults.at(k) if faults else []
         newly_dead: List[int] = []
         replan = False
@@ -302,7 +352,7 @@ class ShardedMiner:
         if not replan:
             return plan, None, 0, 0, newly_dead
         new_plan = plan_shards(self.profile, T.shape[0],
-                               row_block=self.row_block, alive=alive)
+                               row_block=row_block, alive=alive)
         switches, reissued = count_moves(plan, new_plan)
         self.scheduler.switches += switches + reissued
         report.replans += 1
@@ -346,6 +396,24 @@ class ShardedMiner:
 
     def run(self, baskets: Baskets,
             faults: Optional[FaultPlan] = None) -> PipelineResult:
+        """Dispatch on ``config.algorithm`` (apriori | eclat | auto) —
+        every formulation produces bit-identical supports and rules."""
+        algorithm = self.config.algorithm
+        self.algorithm_choice = None
+        if algorithm == "auto":
+            from repro.mining.select import select_algorithm
+            stats = density_stats(baskets)
+            self.algorithm_choice = select_algorithm(
+                baskets, self.config.abs_support(stats.n_tx), stats=stats)
+            algorithm = self.algorithm_choice.algorithm
+        if algorithm == "eclat":
+            return self._run_eclat(baskets, faults)
+        if algorithm != "apriori":
+            raise ValueError(f"unknown mining algorithm {algorithm!r}")
+        return self._run_apriori(baskets, faults)
+
+    def _run_apriori(self, baskets: Baskets,
+                     faults: Optional[FaultPlan] = None) -> PipelineResult:
         cfg = self.config
         rt = self.runtime
         t_start = time.perf_counter()
@@ -441,6 +509,139 @@ class ShardedMiner:
             k += 1
 
         # ---- step 3: association rules (driver, rank 0) ---------------
+        rules, rules_rec = self._serial(
+            "mba-rules",
+            cost=max(1.0, len(supports) * cfg.serial_unit_cost),
+            fn=lambda: generate_rules(
+                AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
+                cfg.min_confidence, min_lift=cfg.min_lift))
+        report.rules_phase = rules_rec
+
+        report.n_itemsets = len(supports)
+        report.n_rules = len(rules)
+        report.wall_time_s = time.perf_counter() - t_start
+        report.ledger = rt.ledger.take_since(mark)
+        return PipelineResult(supports=supports, rules=rules, report=report,
+                              n_tx=n_tx_raw)
+
+    # ------------------------------------------------------------------
+    # vertical (Eclat) execution: the packed tid matrix sharded over the
+    # WORD axis — each rank owns a contiguous band of 32-transaction word
+    # rows, every round is a stateless k-way AND over base item columns
+    # ------------------------------------------------------------------
+    def _run_eclat(self, baskets: Baskets,
+                   faults: Optional[FaultPlan] = None) -> PipelineResult:
+        cfg = self.config
+        rt = self.runtime
+        t_start = time.perf_counter()
+        rt.ledger.take_since(0)
+        mark = rt.ledger.mark()
+        n = self.profile.n
+
+        # ---- columnize on the driver (rank 0), then shard word-major ---
+        def columnize():
+            if isinstance(baskets, SparseSlab):
+                return (baskets.tid_columns(), baskets.n_items,
+                        baskets.n_tx)
+            from repro.data.sparse import pack_tid_columns
+            T, ni, ntx = ingest_baskets(baskets)
+            return pack_tid_columns(T), ni, ntx
+
+        stats = density_stats(baskets)
+        (cols, n_items_raw, n_tx_raw), _ = self._serial(
+            "eclat-columnize", cost=max(1.0, 4.0 * stats.nnz), fn=columnize)
+        min_sup = cfg.abs_support(n_tx_raw)
+        n_items_pad = cols.shape[0]
+        # word-major [W_pad, n_items_pad]: the shardable leading axis is
+        # words (32 tx each); one "row block" is one word row
+        Tw = np.ascontiguousarray(cols.T)
+        # the smoke path re-counts every round against the dense oracle;
+        # only then is the dense bitmap ever materialized on this plane
+        T_dense = (ingest_baskets(baskets)[0] if self.verify_rounds
+                   else None)
+
+        alive = np.ones(n, dtype=bool)
+        plan = plan_shards(self.profile, Tw.shape[0], row_block=1,
+                           alive=alive)
+        data = jnp.asarray(shard_bitmap(Tw, plan))
+        word_bytes = 4 * n_items_pad              # cost units: real-row bytes
+
+        report = PipelineReport(
+            backend=self.backend, policy=rt.policy.name,
+            algorithm="eclat", split=rt.split,
+            profile_speeds=[float(s) for s in self.profile.speeds],
+            n_tx=n_tx_raw, n_items=n_items_raw,
+            n_tiles=plan.n_blocks, min_support=min_sup,
+            execution="sharded", n_shards=n,
+            shard_rows=[int(r) for r in plan.rows])
+        supports = {}
+
+        # ---- round k=1: per-item column popcounts ----------------------
+        plan, new_data, sw, re, dead = self._apply_faults(
+            1, faults, alive, plan, Tw, report, row_block=1)
+        if new_data is not None:
+            data = new_data
+        counts_dev, rec = self._sharded_round(
+            self._eclat_job(n_items_pad, 1), data, plan, word_bytes,
+            switches=sw, reissued=re)
+        counts = np.asarray(counts_dev, dtype=np.int64)
+        if self.verify_rounds:
+            self._check_round(1, T_dense, None, counts[:n_items_raw])
+        frequent = [(int(i),) for i in np.nonzero(
+            counts[:n_items_raw] >= min_sup)[0]]
+        for (i,) in frequent:
+            supports[(i,)] = int(counts[i])
+        report.rounds.append(self._round_view(
+            rec, plan, k=1, n_candidates=n_items_raw,
+            n_frequent=len(frequent), dead=dead))
+
+        # ---- rounds k>=2: serial join + sharded k-way AND-popcount -----
+        k = 2
+        while frequent and (cfg.max_k == 0 or k <= cfg.max_k):
+            plan, new_data, sw, re, dead = self._apply_faults(
+                k, faults, alive, plan, Tw, report, row_block=1)
+            if new_data is not None:
+                data = new_data
+            cands, serial = self._serial(
+                f"eclat-candgen-k{k}",
+                cost=max(1.0, len(frequent) * k * cfg.serial_unit_cost),
+                fn=lambda fr=frequent: generate_candidates(fr))
+            if not cands:
+                rt.charge_moves(serial, sw, re)
+                view = RoundReport.from_phases(
+                    k=k, n_candidates=0, n_frequent=0, map_phase=None,
+                    serial=serial, n_devices=n)
+                view.switches, view.reissued = sw, re
+                view.failed_devices = dead
+                report.rounds.append(view)
+                break
+
+            # candidate item-id matrix, zero-padded to the bucket shape
+            # (padding rows AND item 0's column with itself — junk counts
+            # that are sliced away, never trusted)
+            Cidx = np.zeros((-(-len(cands) // cfg.m_bucket) * cfg.m_bucket,
+                             k), dtype=np.int32)
+            Cidx[:len(cands)] = np.asarray(cands, dtype=np.int32)
+            sup_dev, rec = self._sharded_round(
+                self._eclat_job(Cidx.shape[0], k), data, plan, word_bytes,
+                extra_args=(jnp.asarray(Cidx),), switches=sw, reissued=re)
+            sup = np.asarray(sup_dev, dtype=np.int64)[:len(cands)]
+            if self.verify_rounds:
+                self._check_round(
+                    k, T_dense,
+                    itemsets_to_bitmap(cands, T_dense.shape[1]), sup)
+            frequent = []
+            for c, s in zip(cands, sup):
+                if s >= min_sup:
+                    supports[c] = int(s)
+                    frequent.append(c)
+            report.rounds.append(self._round_view(
+                rec, plan, k=k, n_candidates=len(cands),
+                n_frequent=len(frequent), dead=dead, serial=serial,
+                m_padded=int(Cidx.shape[0])))
+            k += 1
+
+        # ---- association rules (driver, rank 0) ------------------------
         rules, rules_rec = self._serial(
             "mba-rules",
             cost=max(1.0, len(supports) * cfg.serial_unit_cost),

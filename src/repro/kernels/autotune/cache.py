@@ -37,6 +37,7 @@ DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(__file__), "cache.json")
 
 _DIM_NAMES = {
     "support_count": ("n", "m", "i"),
+    "intersect_count": ("m", "w"),
     "rule_match": ("b", "r", "i"),
 }
 

@@ -30,8 +30,10 @@ from repro.kernels.rule_match.fused import rule_scores_fused
 from repro.kernels.rule_match.kernel import rule_scores_pallas
 from repro.kernels.rule_match.ref import rule_scores_ref
 from repro.kernels.support_count.fused import support_count_fused
+from repro.kernels.support_count.intersect import intersect_count_pallas
 from repro.kernels.support_count.kernel import support_count_pallas
-from repro.kernels.support_count.ref import support_count_ref
+from repro.kernels.support_count.ref import (intersect_count_ref,
+                                             support_count_ref)
 from repro.launch.tuning import kernel_candidates, seed_order
 
 
@@ -68,6 +70,12 @@ def make_inputs(kernel: str, shape: Tuple[int, ...], seed: int = 0
     planes (sparse transactions/baskets, 1-4 item candidates/antecedents,
     a tail of never-match padding rows on the serving side)."""
     rng = np.random.default_rng(seed)
+    if kernel == "intersect_count":
+        # two random packed tid-slabs (every bit pattern is a legal
+        # tid-list, so uniform uint32 words exercise the full popcount)
+        m, w = shape
+        bits = rng.integers(0, 2**32, size=(2, m, w), dtype=np.uint32)
+        return {"A": jnp.asarray(bits[0]), "B": jnp.asarray(bits[1])}
     n, m, i = shape
     X = (rng.random((n, i)) < 0.3).astype(np.int8)
     A = np.zeros((m, i), np.int8)
@@ -94,6 +102,10 @@ def run_config(kernel: str, config: Dict[str, Any],
                interpret: bool) -> jnp.ndarray:
     cfg = dict(config)
     variant = cfg.pop("variant")
+    if kernel == "intersect_count":
+        return intersect_count_pallas(inputs["A"], inputs["B"],
+                                      bm=cfg["bm"], bw=cfg["bw"],
+                                      interpret=interpret)
     if kernel == "support_count":
         T, C, sizes = inputs["T"], inputs["C"], inputs["sizes"]
         if variant == "packed":
@@ -111,6 +123,9 @@ def run_config(kernel: str, config: Dict[str, Any],
 
 
 def oracle(kernel: str, inputs: Dict[str, jnp.ndarray]) -> np.ndarray:
+    if kernel == "intersect_count":
+        return np.asarray(intersect_count_ref(inputs["A"], inputs["B"])
+                          )[None, :].astype(np.int32)
     if kernel == "support_count":
         return np.asarray(support_count_ref(inputs["T"], inputs["C"])
                           )[None, :].astype(np.int32)
@@ -187,6 +202,12 @@ def standard_shapes(kernel: str, smoke: bool = False
             return [(64, 128, 128)]
         return [(n, m, 128) for n in (64, 256, 1024)
                 for m in (128, 256, 512, 2048)]
+    if kernel == "intersect_count":
+        # Eclat rounds: candidate count varies widely, word axis is
+        # W = ceil(n_tx/32) padded to 128 lanes (128 words ≈ 4k tx)
+        if smoke:
+            return [(128, 128)]
+        return [(m, w) for m in (128, 512, 2048) for w in (128, 256)]
     if smoke:
         return [(8, 128, 128)]
     return [(b, r, 128) for b in (8, 64) for r in (128, 512)]

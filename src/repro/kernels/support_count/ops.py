@@ -21,8 +21,9 @@ import jax.numpy as jnp
 
 from repro.kernels.autotune.cache import resolve_config
 from repro.kernels.support_count.fused import support_count_fused
+from repro.kernels.support_count.intersect import intersect_count_pallas
 from repro.kernels.support_count.kernel import support_count_pallas
-from repro.kernels.support_count.ref import support_count_ref
+from repro.kernels.support_count.ref import intersect_count_ref, support_count_ref
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int):
@@ -79,4 +80,35 @@ def support_count(T: jnp.ndarray, C: jnp.ndarray, *,
     return counts
 
 
+def intersect_count(A: jnp.ndarray, B: jnp.ndarray, *,
+                    interpret: bool | None = None,
+                    tuning=None) -> jnp.ndarray:
+    """Row-aligned tid-slab intersection counts [M] int32 (Eclat primitive).
+
+    A, B: [M, W] packed uint32 tid-lists — row m of the output is
+    |tidset(A[m]) ∩ tidset(B[m])|.  Pads M→128·, W→128· with zero words
+    (inert: popcount(0) == 0) and slices padded rows away.
+
+    ``tuning`` follows the family contract: ``None`` = the checked-in
+    autotune cache; ``False`` = roofline-seeded default config; a config
+    ``dict`` or an ``AutotuneCache`` pins the choice.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if A.shape != B.shape:
+        raise ValueError(f"slab shapes differ: {A.shape} vs {B.shape}")
+    M0 = A.shape[0]
+    if M0 == 0:          # empty candidate level: nothing to intersect
+        return jnp.zeros((0,), jnp.int32)
+    A = _pad_to(_pad_to(A.astype(jnp.uint32), 1, 128), 0, 128)
+    B = _pad_to(_pad_to(B.astype(jnp.uint32), 1, 128), 0, 128)
+    M, W = A.shape
+    cfg = resolve_config("intersect_count", (M, W), tuning)
+    bm = _fit(cfg.get("bm", 256), M)
+    bw = _fit(cfg.get("bw", 128), W)
+    out = intersect_count_pallas(A, B, bm=bm, bw=bw, interpret=interpret)
+    return out[0, :M0]
+
+
 support_count_oracle = support_count_ref
+intersect_count_oracle = intersect_count_ref

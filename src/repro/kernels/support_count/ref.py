@@ -1,6 +1,7 @@
 """Pure-jnp oracle for the support-count kernel."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -12,3 +13,12 @@ def support_count_ref(T: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
     dots = jnp.dot(T.astype(jnp.int32), C.astype(jnp.int32).T)      # [N, M]
     sizes = C.astype(jnp.int32).sum(axis=1)                          # [M]
     return (dots == sizes[None, :]).astype(jnp.int32).sum(axis=0)    # [M]
+
+
+def intersect_count_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """A, B: [M, W] packed uint32 tid-slabs (bit b of word w = tid 32w+b).
+
+    counts[m] = |tidset(A[m]) ∩ tidset(B[m])| = Σ_w popcount(A[m,w] & B[m,w])
+    """
+    inter = jax.lax.population_count(A & B)                          # [M, W]
+    return jnp.sum(inter.astype(jnp.int32), axis=1)                  # [M]

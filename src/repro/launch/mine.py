@@ -11,13 +11,22 @@ phase once, ``dynamic`` closes the loop (EWMA speed feedback, straggler
 speculation), ``costmodel`` seeds tile costs from roofline estimates.
 `--split` selects the tile split (``lpt`` | ``proportional`` | ``equal``).
 
+`--algorithm` selects the mining formulation: ``apriori`` (horizontal
+bitmap rounds), ``eclat`` (vertical tid-list AND-popcount rounds), or
+``auto`` (the algorithm cost model prices both on measured density
+features and picks one).  `--dataset sparse` generates a wide-universe
+low-frequency corpus consumed through the sparse CSR slab — the Eclat
+path then never materializes the dense bitmap.
+
 `--sharded` executes the distributed mining plane instead (shard_map over a
 device mesh; run with XLA_FLAGS=--xla_force_host_platform_device_count=8
 for a simulated 8-rank CPU mesh), and `--smoke` additionally runs the
 single-device pipeline on the same data and asserts bit-identical itemsets
 and rules — the CI multi-device end-to-end check (run under both
 ``--policy static`` and ``--policy dynamic``: results must not depend on
-the switching policy).
+the switching policy, and with ``--algorithm eclat|auto`` the reference
+pipeline is the Apriori oracle, so the cross-algorithm parity is asserted
+too).
 """
 from __future__ import annotations
 
@@ -25,7 +34,8 @@ import argparse
 import os
 
 from repro.core.hetero import HeterogeneityProfile
-from repro.data.baskets import BasketConfig, generate_baskets
+from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
+from repro.data.sparse import SparseSlab
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
 from repro.runtime import POLICY_NAMES
 
@@ -37,20 +47,33 @@ PROFILES = {
 }
 
 
+def _make_dataset(dataset: str, n_tx: int, n_items: int, seed: int):
+    """dense → 0/1 bitmap; sparse → CSR slab (never densified here)."""
+    if dataset == "sparse":
+        baskets = sparse_baskets(n_tx, max(n_items, 256), seed=seed,
+                                 max_item_freq=0.05)
+        return SparseSlab.from_baskets(baskets, n_items=max(n_items, 256))
+    return generate_baskets(BasketConfig(n_tx=n_tx, n_items=n_items,
+                                         seed=seed))
+
+
 def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          min_confidence: float = 0.6, profile_name: str = "paper",
          split: str = "lpt", n_tiles: int = 32, data_plane: str = "auto",
          seed: int = 0, top: int = 15, sharded: bool = False,
          n_shards: int = 0, smoke: bool = False, policy: str = "static",
-         autotune: bool = True):
+         autotune: bool = True, algorithm: str = "apriori",
+         dataset: str = "dense"):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 2048), min(n_items, 64)
 
-    T = generate_baskets(BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed))
+    T = _make_dataset(dataset, n_tx, n_items, seed)
     config = PipelineConfig(min_support=min_support,
                             min_confidence=min_confidence,
                             n_tiles=n_tiles, policy=policy, split=split,
-                            data_plane=data_plane, autotune=autotune)
+                            data_plane=data_plane, autotune=autotune,
+                            algorithm=algorithm)
+    choice = None
 
     if sharded:
         from repro.distributed.mining import (ShardedMiner, make_shard_mesh,
@@ -60,34 +83,45 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
         profile = mesh_profile(n, PROFILES[profile_name]())
         print(f"[mine] sharded mesh={n} ranks "
               f"speeds={profile.speeds.tolist()} policy={policy} "
-              f"split={split}")
+              f"split={split} algorithm={algorithm}")
         miner = ShardedMiner(mesh=mesh, profile=profile, config=config,
                              verify_rounds=smoke)
         result = miner.run(T)
+        choice = miner.algorithm_choice
     else:
+        from repro.mining import make_miner
         profile = PROFILES[profile_name]()
         print(f"[mine] profile={profile_name} speeds={profile.speeds.tolist()} "
-              f"policy={policy} split={split}")
-        result = MarketBasketPipeline(profile, config).run(T)
+              f"policy={policy} split={split} algorithm={algorithm}")
+        miner, choice = make_miner(T, profile=profile, config=config)
+        result = miner.run(T)
 
+    if choice is not None:
+        print(f"[mine] {choice.summary()}")
     print(result.report.summary())
     print(f"[mine] top rules (min_conf={min_confidence}):")
     for r in result.rules[:top]:
         print("   ", r)
 
-    if smoke and sharded:
-        # end-to-end cross-plane check: sharded == single-device, bit for bit
-        # (and independent of the switching policy — scheduling must never
-        # change what gets mined, only when/where it runs)
+    if smoke and (sharded or algorithm != "apriori"):
+        # end-to-end cross-plane AND cross-algorithm check: whatever ran
+        # (sharded, eclat, auto) must equal the single-device Apriori
+        # oracle bit for bit — scheduling and formulation must never
+        # change what gets mined, only when/where/how it runs
+        oracle_cfg = PipelineConfig(
+            min_support=min_support, min_confidence=min_confidence,
+            n_tiles=n_tiles, policy=policy, split=split,
+            data_plane=data_plane, autotune=autotune)
         single = MarketBasketPipeline(PROFILES[profile_name](),
-                                      config).run(T)
+                                      oracle_cfg).run(T)
         assert result.supports == single.supports, \
-            "sharded vs single-device itemset mismatch"
+            "mined itemsets differ from the single-device Apriori oracle"
         assert result.rules == single.rules, \
-            "sharded vs single-device rule mismatch"
-        print(f"[mine] smoke OK: sharded == single-device "
+            "mined rules differ from the single-device Apriori oracle"
+        ran = result.report.algorithm + (" sharded" if sharded else "")
+        print(f"[mine] smoke OK: {ran} == single-device apriori "
               f"({len(result.supports)} itemsets, {len(result.rules)} rules, "
-              f"{result.report.n_shards} ranks, policy={policy})")
+              f"policy={policy})")
     return result
 
 
@@ -105,6 +139,16 @@ def main():
     ap.add_argument("--split", default="lpt",
                     choices=["lpt", "proportional", "equal"],
                     help="tile split strategy across the core profile")
+    ap.add_argument("--algorithm", default="apriori",
+                    choices=["apriori", "eclat", "auto"],
+                    help="mining formulation: horizontal bitmap (apriori), "
+                         "vertical tid-lists (eclat), or cost-model "
+                         "selection on measured density features (auto)")
+    ap.add_argument("--dataset", default="dense",
+                    choices=["dense", "sparse"],
+                    help="dense = IBM-Quest bitmap; sparse = wide-universe "
+                         "low-frequency corpus via the CSR slab (the Eclat "
+                         "path never builds the dense bitmap)")
     ap.add_argument("--n-tiles", type=int, default=32)
     ap.add_argument("--data-plane", default="auto",
                     choices=["auto", "pallas", "ref"])
@@ -120,7 +164,8 @@ def main():
                     help="mesh ranks (default: all visible devices)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: small data, per-round invariant checks, "
-                         "and (with --sharded) single-device parity assert")
+                         "and (with --sharded / --algorithm eclat|auto) "
+                         "single-device Apriori parity assert")
     args = ap.parse_args()
     if args.sharded and "XLA_FLAGS" not in os.environ:
         # default in a multi-device mesh for the CLI only — XLA reads this
@@ -130,7 +175,8 @@ def main():
     mine(args.n_tx, args.n_items, args.min_support, args.min_confidence,
          args.profile, args.split, args.n_tiles, args.data_plane, args.seed,
          sharded=args.sharded, n_shards=args.n_shards, smoke=args.smoke,
-         policy=args.policy, autotune=args.autotune)
+         policy=args.policy, autotune=args.autotune,
+         algorithm=args.algorithm, dataset=args.dataset)
 
 
 if __name__ == "__main__":

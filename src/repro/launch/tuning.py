@@ -112,7 +112,7 @@ _PACKED_OPS_PER_WORD = 3.0
 # until the working set forces tiling.
 KERNEL_STEP_OVERHEAD_US = 15.0
 
-TUNABLE_KERNELS = ("support_count", "rule_match")
+TUNABLE_KERNELS = ("support_count", "intersect_count", "rule_match")
 
 
 def _fit_tile(want: int, dim: int, floor: int = 1) -> int:
@@ -127,8 +127,9 @@ def kernel_candidates(kernel: str, shape: Tuple[int, ...]
                       ) -> List[Dict[str, Any]]:
     """The swept config space for one kernel at one (padded) shape.
 
-    support_count: shape = (N, M, I) — transactions, candidates, items.
-    rule_match:    shape = (B, R, I) — queries, rule rows, items.
+    support_count:   shape = (N, M, I) — transactions, candidates, items.
+    intersect_count: shape = (M, W)    — candidate rows, packed tid words.
+    rule_match:      shape = (B, R, I) — queries, rule rows, items.
     Every candidate is a dict with a ``variant`` plus that variant's tile
     shape; all candidates compute bit-identical results (the fuzz harness
     holds the tuner to that), so picking any of them is safe.
@@ -136,7 +137,6 @@ def kernel_candidates(kernel: str, shape: Tuple[int, ...]
     if kernel not in TUNABLE_KERNELS:
         raise ValueError(f"unknown tunable kernel {kernel!r} "
                          f"(known: {', '.join(TUNABLE_KERNELS)})")
-    n, m, i = shape
     cands: List[Dict[str, Any]] = []
     seen = set()
 
@@ -146,6 +146,17 @@ def kernel_candidates(kernel: str, shape: Tuple[int, ...]
             seen.add(key)
             cands.append(cfg)
 
+    if kernel == "intersect_count":
+        # row-aligned AND-popcount: one variant (there is no matmul
+        # formulation of a per-row intersection), tiles over (M, W) only
+        m, w = shape
+        for wm in (512, 256, 128, m):
+            for ww in (512, 128, w):
+                add({"variant": "packed", "bm": _fit_tile(wm, m),
+                     "bw": _fit_tile(ww, w)})
+        return cands
+
+    n, m, i = shape
     a, b = ("bn", "bm") if kernel == "support_count" else ("bb", "br")
     for wn in (512, 256, n):
         for wm in (256, 128, m):
@@ -164,6 +175,16 @@ def estimate_cost_us(kernel: str, shape: Tuple[int, ...],
     launch overhead; traffic counts the block re-reads tiling implies
     (T/Q re-read once per candidate tile, C/A once per row tile).
     """
+    if kernel == "intersect_count":
+        # both slabs read exactly once (row-aligned, no re-reads); the
+        # [1, bm] out block is revisited once per word tile
+        m, w = shape
+        tm, tw = config["bm"], config["bw"]
+        steps = (m // tm) * (w // tw)
+        compute_s = _PACKED_OPS_PER_WORD * m * w / VPU_OPS
+        traffic = 4.0 * (2.0 * m * w + m * (w // tw))
+        return (max(compute_s, traffic / HBM_BW) * 1e6
+                + steps * KERNEL_STEP_OVERHEAD_US)
     n, m, i = shape
     a, b = ("bn", "bm") if kernel == "support_count" else ("bb", "br")
     tn, tm = config[a], config[b]
@@ -202,6 +223,11 @@ def shape_flops_bytes(kernel: str, shape: Tuple[int, ...]
     """Task-intrinsic (flops, bytes) for one kernel shape — the variant-
     independent work the containment test costs, used to turn a measured
     wall into effective peak/bandwidth for CostModelPolicy seeding."""
+    if kernel == "intersect_count":
+        # one AND+popcount+add per word-pair ≙ the 2·32 bit-ops the dense
+        # formulation would spend on those 32 items (64 flops per word)
+        m, w = shape
+        return 64.0 * m * w, float(8 * m * w + 4 * m)
     n, m, i = shape
     flops = 2.0 * n * m * i
     bytes_ = float(n * i + m * i + 4 * m + (4 * n * m

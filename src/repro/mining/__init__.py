@@ -1,0 +1,16 @@
+"""Mining backends: algorithm formulations behind one protocol.
+
+The horizontal (Apriori) plane lives in :mod:`repro.pipeline`; this
+package adds the vertical (Eclat) formulation plus the cost-model
+auto-selector that picks between them per dataset.
+"""
+from repro.mining.backend import (ALGORITHMS, MiningBackend, make_miner,
+                                  resolve_algorithm)
+from repro.mining.eclat.miner import EclatMiner
+from repro.mining.select import (AlgorithmChoice, AlgorithmCostModel,
+                                 select_algorithm)
+
+__all__ = [
+    "ALGORITHMS", "AlgorithmChoice", "AlgorithmCostModel", "EclatMiner",
+    "MiningBackend", "make_miner", "resolve_algorithm", "select_algorithm",
+]

@@ -40,12 +40,13 @@ from repro.core.power import PowerModel
 from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.core.rules import Rule, generate_rules
 from repro.data.baskets import pack_transactions, pad_items
+from repro.data.sparse import SparseSlab
 from repro.pipeline.dataplane import DataPlane, uniform_tiles
 from repro.pipeline.report import PipelineReport, RoundReport
 from repro.runtime import (MeasuredPhase, Runtime, SwitchingPolicy,
                            autotuned_costmodel)
 
-Baskets = Union[np.ndarray, Sequence[Sequence[int]]]
+Baskets = Union[np.ndarray, SparseSlab, Sequence[Sequence[int]]]
 
 
 def ingest_baskets(baskets: Baskets) -> Tuple[np.ndarray, int, int]:
@@ -53,8 +54,12 @@ def ingest_baskets(baskets: Baskets) -> Tuple[np.ndarray, int, int]:
 
     Returns ``(lane-padded bitmap, raw item count, raw tx count)``.  Shared
     by the single-device pipeline and the sharded miner so both planes agree
-    byte-for-byte on what they mine.
+    byte-for-byte on what they mine.  A :class:`SparseSlab` densifies here
+    *explicitly* — the horizontal (Apriori) formulation needs the dense
+    bitmap; the Eclat plane columnizes the slab without it.
     """
+    if isinstance(baskets, SparseSlab):
+        baskets = baskets.to_dense()
     if isinstance(baskets, np.ndarray):
         if baskets.ndim != 2:
             raise ValueError(f"bitmap must be 2-D, got {baskets.shape}")
@@ -80,6 +85,11 @@ class PipelineConfig:
     min_confidence: float = 0.6
     min_lift: float = 0.0
     max_k: int = 0                  # 0 = mine until no candidates survive
+    # Mining backend: "apriori" (horizontal bitmap rounds), "eclat"
+    # (vertical tid-list intersections), or "auto" (the algorithm cost
+    # model picks per dataset from measured density/sparsity features —
+    # see repro.mining.select).  All backends are pinned bit-identical.
+    algorithm: str = "apriori"
     n_tiles: int = 32
     policy: str = "static"          # switching: static | dynamic | costmodel
     split: str = "lpt"              # tile split: equal | proportional | lpt

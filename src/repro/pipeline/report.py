@@ -86,6 +86,7 @@ class PipelineReport:
     n_items: int
     n_tiles: int
     min_support: int              # absolute, after fraction resolution
+    algorithm: str = "apriori"    # mining backend: "apriori" | "eclat"
     split: str = "lpt"            # tile split: lpt | proportional | equal
     rounds: List[RoundReport] = field(default_factory=list)
     rules_phase: Optional[PhaseRecord] = None
@@ -158,7 +159,8 @@ class PipelineReport:
     # ------------------------------------------------------------------
     def summary(self) -> str:
         lines = [
-            f"MarketBasketPipeline: backend={self.backend} "
+            f"MarketBasketPipeline: algorithm={self.algorithm} "
+            f"backend={self.backend} "
             f"policy={self.policy} split={self.split} "
             f"cores={self.profile_speeds}",
         ]

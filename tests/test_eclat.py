@@ -1,0 +1,216 @@
+"""The Eclat vertical-mining plane: bit-identical parity with the Apriori
+pipeline (the backends' contract), the sparse CSR slab round trips, the
+cost-model auto-selection, and the autotune degradation ladder for the
+``intersect_count`` kernel."""
+import numpy as np
+import pytest
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.core.itemsets import apriori_bruteforce
+from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
+from repro.data.sparse import SparseSlab, density_stats, pack_tid_columns
+from repro.kernels.autotune.cache import AutotuneCache, resolve_config
+from repro.launch.tuning import default_config
+from repro.mining import (AlgorithmCostModel, EclatMiner, make_miner,
+                          select_algorithm)
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+
+PROFILE = HeterogeneityProfile.paper
+
+
+def _cfg(**kw):
+    kw.setdefault("min_support", 0.05)
+    kw.setdefault("n_tiles", 8)
+    return PipelineConfig(**kw)
+
+
+def _dense(n_tx=600, n_items=48, seed=0):
+    return generate_baskets(BasketConfig(n_tx=n_tx, n_items=n_items,
+                                         seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# parity: eclat == apriori == bruteforce, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_eclat_matches_apriori_and_bruteforce():
+    T = _dense()
+    cfg = _cfg()
+    apriori = MarketBasketPipeline(PROFILE(), cfg).run(T)
+    eclat = EclatMiner(PROFILE(), cfg).run(T)
+    assert eclat.supports == apriori.supports
+    assert eclat.rules == apriori.rules
+    assert eclat.report.algorithm == "eclat"
+    want = apriori_bruteforce(T, cfg.abs_support(T.shape[0]), max_k=8)
+    assert eclat.supports == want
+
+
+@pytest.mark.parametrize("policy", ["dynamic", "costmodel"])
+def test_eclat_parity_under_every_policy(policy):
+    T = _dense(400, 32, seed=2)
+    cfg = _cfg(policy=policy)
+    apriori = MarketBasketPipeline(PROFILE(), cfg).run(T)
+    eclat = EclatMiner(PROFILE(), cfg).run(T)
+    assert eclat.supports == apriori.supports
+    assert eclat.rules == apriori.rules
+
+
+def test_eclat_edge_no_frequent_items():
+    T = _dense(100, 16, seed=1)
+    cfg = _cfg(min_support=1.0)         # support in *every* transaction
+    eclat = EclatMiner(PROFILE(), cfg).run(T)
+    apriori = MarketBasketPipeline(PROFILE(), cfg).run(T)
+    assert eclat.supports == apriori.supports
+    assert eclat.rules == [] == apriori.rules
+
+
+def test_eclat_edge_singleton_survivor():
+    # exactly one frequent item: no pairs to intersect, no rules
+    T = np.zeros((40, 8), np.uint8)
+    T[:, 3] = 1
+    T[:5, 0] = 1
+    cfg = _cfg(min_support=0.5)
+    eclat = EclatMiner(PROFILE(), cfg).run(T)
+    assert eclat.supports == {(3,): 40}
+    assert eclat.rules == []
+
+
+def test_eclat_edge_all_frequent():
+    # every item in every basket: the lattice saturates at max_k
+    T = np.ones((30, 5), np.uint8)
+    cfg = _cfg(min_support=0.9, max_k=3)
+    eclat = EclatMiner(PROFILE(), cfg).run(T)
+    apriori = MarketBasketPipeline(PROFILE(), cfg).run(T)
+    assert eclat.supports == apriori.supports
+    assert all(v == 30 for v in eclat.supports.values())
+    assert max(len(c) for c in eclat.supports) == 3
+
+
+def test_eclat_accepts_id_lists_and_slab():
+    baskets = [[0, 2, 5], [2, 5], [0, 5], [5], [0, 2]] * 20
+    slab = SparseSlab.from_baskets(baskets, n_items=8)
+    cfg = _cfg(min_support=0.3)
+    from_lists = EclatMiner(PROFILE(), cfg).run(baskets)
+    from_slab = EclatMiner(PROFILE(), cfg).run(slab)
+    oracle = MarketBasketPipeline(PROFILE(), cfg).run(baskets)
+    assert from_lists.supports == from_slab.supports == oracle.supports
+    assert from_lists.rules == from_slab.rules == oracle.rules
+
+
+def test_eclat_sparse_input_never_densifies(monkeypatch):
+    slab = SparseSlab.from_baskets(
+        sparse_baskets(300, 256, seed=4), n_items=256)
+    monkeypatch.setattr(
+        SparseSlab, "to_dense",
+        lambda self: (_ for _ in ()).throw(
+            AssertionError("eclat densified the sparse slab")))
+    res = EclatMiner(PROFILE(), _cfg(min_support=0.02)).run(slab)
+    assert res.report.algorithm == "eclat"
+    assert res.report.n_itemsets > 0
+
+
+# ---------------------------------------------------------------------------
+# sparse slab round trips
+# ---------------------------------------------------------------------------
+
+def test_sparse_slab_round_trip_exact():
+    T = _dense(130, 33, seed=5)
+    slab = SparseSlab.from_dense(T)
+    np.testing.assert_array_equal(slab.to_dense(), T)
+    assert slab.nnz == int(T.sum())
+    # id-list construction is equivalent to dense construction
+    baskets = [list(np.flatnonzero(row)) for row in T]
+    slab2 = SparseSlab.from_baskets(baskets, n_items=T.shape[1])
+    np.testing.assert_array_equal(slab2.to_dense(), T)
+
+
+def test_sparse_slab_tid_columns_match_dense_packing():
+    T = _dense(100, 40, seed=6)
+    got = SparseSlab.from_dense(T).tid_columns()
+    want = pack_tid_columns(T)
+    np.testing.assert_array_equal(got, want)
+    # bit (item i, tx t) lives at word t >> 5, bit t & 31
+    for i, t in ((0, 0), (7, 33), (39, 99)):
+        bit = (int(got[i, t >> 5]) >> (t & 31)) & 1
+        assert bit == int(T[t, i])
+
+
+def test_density_stats_agree_across_input_forms():
+    T = _dense(90, 24, seed=7)
+    slab = SparseSlab.from_dense(T)
+    baskets = [list(np.flatnonzero(row)) for row in T]
+    for form in (T, slab, baskets):
+        s = density_stats(form)
+        assert (s.n_tx, s.n_items, s.nnz) == (90, 24, int(T.sum()))
+        np.testing.assert_array_equal(s.item_counts, T.sum(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# auto-selection
+# ---------------------------------------------------------------------------
+
+def test_auto_selection_scripted_rates_force_each_algorithm():
+    T = _dense(256, 32, seed=8)
+    # eclat's kernel runs at datasheet rates while apriori's crawls → eclat
+    slow, fast = (1e3, 1e3), (1e15, 1e15)
+    pick_e = select_algorithm(T, 13, model=AlgorithmCostModel(
+        {"support_count": slow, "intersect_count": fast}))
+    assert pick_e.algorithm == "eclat"
+    pick_a = select_algorithm(T, 13, model=AlgorithmCostModel(
+        {"support_count": fast, "intersect_count": slow}))
+    assert pick_a.algorithm == "apriori"
+    # the evidence trail carries both priced costs and the features
+    assert pick_e.est_cost_s["eclat"] < pick_e.est_cost_s["apriori"]
+    assert pick_a.features["n_tx"] == 256.0
+
+
+def test_make_miner_routes_auto_through_the_choice():
+    T = _dense(300, 32, seed=9)
+    model = AlgorithmCostModel({"support_count": (1e3, 1e3),
+                                "intersect_count": (1e15, 1e15)})
+    miner, choice = make_miner(T, profile=PROFILE(),
+                               config=_cfg(algorithm="auto"), model=model)
+    assert isinstance(miner, EclatMiner)
+    assert choice is not None and choice.algorithm == "eclat"
+    assert "auto-selected eclat" in choice.summary()
+    # explicit algorithms return no choice
+    miner2, choice2 = make_miner(T, profile=PROFILE(),
+                                 config=_cfg(algorithm="apriori"))
+    assert isinstance(miner2, MarketBasketPipeline) and choice2 is None
+
+
+def test_auto_parity_with_apriori_oracle():
+    T = _dense(500, 40, seed=10)
+    cfg = _cfg(algorithm="auto")
+    miner, choice = make_miner(T, profile=PROFILE(), config=cfg)
+    res = miner.run(T)
+    oracle = MarketBasketPipeline(PROFILE(), _cfg()).run(T)
+    assert res.supports == oracle.supports
+    assert res.rules == oracle.rules
+    assert choice.algorithm in ("apriori", "eclat")
+
+
+# ---------------------------------------------------------------------------
+# autotune degradation: a cold cache prices/configures, never raises
+# ---------------------------------------------------------------------------
+
+def test_intersect_count_cold_cache_degrades_to_default():
+    empty = AutotuneCache()
+    cfg = resolve_config("intersect_count", (512, 128), empty)
+    assert cfg == default_config("intersect_count", (512, 128))
+    assert cfg["variant"] == "packed" and cfg["bm"] >= 1
+
+
+def test_cost_model_cold_cache_degrades_to_roofline():
+    model = AlgorithmCostModel.from_autotune(cache=AutotuneCache())
+    assert model.cost_source["intersect_count"] == "roofline"
+    assert model.cost_source["support_count"] == "roofline"
+    choice = model.estimate(density_stats(_dense(200, 24, seed=11)), 10)
+    assert choice.algorithm in ("apriori", "eclat")   # priced, not raised
+
+
+def test_checked_in_cache_covers_intersect_count():
+    from repro.kernels.autotune.cache import default_cache
+    cache = default_cache()
+    assert any(k.startswith("intersect_count|") for k in cache.entries), \
+        "run the intersect_count sweep into the checked-in cache"

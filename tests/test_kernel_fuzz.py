@@ -20,8 +20,9 @@ import jax.numpy as jnp
 
 from repro.kernels.rule_match.ops import rule_topk
 from repro.kernels.rule_match.ref import rule_scores_ref
-from repro.kernels.support_count.ops import support_count
-from repro.kernels.support_count.ref import support_count_ref
+from repro.kernels.support_count.ops import intersect_count, support_count
+from repro.kernels.support_count.ref import (intersect_count_ref,
+                                             support_count_ref)
 
 # sampled (not arbitrary) dims: every distinct padded shape is a fresh XLA
 # compile, so the strategy draws from a small lattice that still crosses
@@ -80,6 +81,38 @@ def test_support_count_differential(problem):
             tuning={"variant": variant, **tiles}))
         np.testing.assert_array_equal(
             got, want, err_msg=f"variant={variant} tiles={tiles}")
+
+
+def np_intersect_count(A, B):
+    """Python oracle for the Eclat round kernel: popcount(A & B) per row,
+    via unpackbits on the raw little-endian bytes (no popcount intrinsic)."""
+    bits = np.unpackbits((np.asarray(A) & np.asarray(B)).view(np.uint8),
+                         axis=1, bitorder="little")
+    return bits.sum(axis=1).astype(np.int32)
+
+
+@st.composite
+def intersect_problems(draw):
+    m = draw(st.sampled_from((0, 1, 5, 128, 200)))
+    w = draw(st.sampled_from((1, 4, 128, 130)))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    A, B = rng.integers(0, 2**32, size=(2, m, w), dtype=np.uint32)
+    tiles = {"bm": draw(st.sampled_from(_TILES)),
+             "bw": draw(st.sampled_from(_TILES))}
+    return A, B, tiles
+
+
+@settings(max_examples=25, deadline=None)
+@given(intersect_problems())
+def test_intersect_count_differential(problem):
+    A, B, tiles = problem
+    want = np_intersect_count(A, B)
+    ref = np.asarray(intersect_count_ref(jnp.asarray(A), jnp.asarray(B)))
+    np.testing.assert_array_equal(ref, want)        # jitted ref vs oracle
+    got = np.asarray(intersect_count(jnp.asarray(A), jnp.asarray(B),
+                                     tuning={"variant": "packed", **tiles}))
+    np.testing.assert_array_equal(got, want, err_msg=f"tiles={tiles}")
 
 
 @st.composite
