@@ -1,0 +1,99 @@
+"""Open-loop load generator for the async serving benchmarks and tests.
+
+Closed-loop measurement (send a batch, wait, send the next) can only ever
+see the server keeping up — the arrival process adapts to the service
+rate and queueing delay is invisible.  Open-loop load fixes the arrival
+process independently of the server (the standard serving-benchmark
+discipline), so sustained throughput and latency-under-load mean what
+they say.  Everything here is seeded and deterministic.
+
+  poisson_arrivals  — memoryless arrivals at a target rate (the steady
+                      open-loop baseline)
+  bursty_arrivals   — alternating burst/lull phases around the same mean
+                      rate (what slot admission + bucket coalescing exist
+                      to absorb)
+  zipf_queries      — baskets over a Zipf-popular item universe (head
+                      items repeat across baskets: the realistic cache /
+                      coalescing mix, unlike uniform corpora)
+  open_loop_trace   — the three composed: (queries, arrival_s) ready for
+                      ``AsyncServer.submit`` or ``engine.serve``
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def poisson_arrivals(n: int, rate_qps: float, seed: int = 0) -> np.ndarray:
+    """n arrival instants with exponential inter-arrival gaps (Poisson
+    process at ``rate_qps``), starting after the first gap."""
+    if rate_qps <= 0:
+        return np.zeros(n)
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def bursty_arrivals(n: int, rate_qps: float, burst_factor: float = 8.0,
+                    burst_len: int = 16, seed: int = 0) -> np.ndarray:
+    """Bursty open-loop arrivals with overall mean rate ``rate_qps``.
+
+    Requests alternate between bursts of ``burst_len`` arriving at
+    ``burst_factor`` x the mean rate and lulls slowed down so the overall
+    mean stays at ``rate_qps`` — the burst and the lull trade the same
+    time budget.  Exercises coalescing (bursts fill big buckets) and
+    queue drain (lulls let the backlog clear).
+    """
+    if rate_qps <= 0:
+        return np.zeros(n)
+    if burst_factor <= 1.0:
+        return poisson_arrivals(n, rate_qps, seed)
+    rng = np.random.default_rng(seed)
+    # mean gap g must satisfy: half the requests at g/f, half at g_lull,
+    # with (g/f + g_lull)/2 == g  =>  g_lull = g(2 - 1/f)
+    g = 1.0 / rate_qps
+    gaps = np.empty(n)
+    for i in range(n):
+        in_burst = (i // burst_len) % 2 == 0
+        mean = g / burst_factor if in_burst else g * (2.0 - 1.0 / burst_factor)
+        gaps[i] = rng.exponential(mean)
+    return np.cumsum(gaps)
+
+
+def zipf_queries(n: int, n_items: int, alpha: float = 1.2,
+                 mean_len: float = 3.0, seed: int = 0) -> List[List[int]]:
+    """n baskets (item-id lists) over a Zipf(``alpha``) item popularity.
+
+    Head items recur across baskets — the repeated-basket tail a result
+    cache wins on and the realistic skew for coalesced batches.  Basket
+    length is 1 + Poisson(mean_len - 1); items are drawn without
+    replacement within a basket.
+    """
+    rng = np.random.default_rng(seed)
+    p = 1.0 / np.arange(1, n_items + 1, dtype=np.float64) ** alpha
+    p /= p.sum()
+    queries = []
+    for _ in range(n):
+        size = min(1 + rng.poisson(max(mean_len - 1.0, 0.0)), n_items)
+        queries.append(sorted(rng.choice(n_items, size=size, replace=False,
+                                         p=p).tolist()))
+    return queries
+
+
+def open_loop_trace(n: int, n_items: int, rate_qps: float,
+                    pattern: str = "poisson", alpha: float = 1.2,
+                    mean_len: float = 3.0, burst_factor: float = 8.0,
+                    burst_len: int = 16, seed: int = 0
+                    ) -> Tuple[List[List[int]], np.ndarray]:
+    """(queries, arrival_s) for one open-loop run; ``pattern`` is
+    ``poisson`` or ``bursty``."""
+    if pattern == "poisson":
+        arrivals = poisson_arrivals(n, rate_qps, seed=seed + 1)
+    elif pattern == "bursty":
+        arrivals = bursty_arrivals(n, rate_qps, burst_factor=burst_factor,
+                                   burst_len=burst_len, seed=seed + 1)
+    else:
+        raise ValueError(f"unknown arrival pattern {pattern!r} "
+                         f"(poisson | bursty)")
+    return zipf_queries(n, n_items, alpha=alpha, mean_len=mean_len,
+                        seed=seed), arrivals

@@ -20,6 +20,11 @@
                              (dense + sparse-slab corpora; the
                              eclat-beats-apriori-on-dense and
                              auto-within-1.1x gates)
+  B12 bench_async_serving  — continuous-batching async serving under
+                             open-loop Poisson/bursty load (sustained QPS
+                             + p99-under-load vs the closed-loop
+                             per-request baseline; the async-strictly-
+                             higher-QPS and p99-no-worse gates)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -38,9 +43,10 @@ import json
 import os
 import sys
 
-from benchmarks import (bench_algorithms, bench_apriori, bench_kernels,
-                        bench_pipeline, bench_policies, bench_power,
-                        bench_roofline, bench_scheduler, bench_serving,
+from benchmarks import (bench_algorithms, bench_apriori,
+                        bench_async_serving, bench_kernels, bench_pipeline,
+                        bench_policies, bench_power, bench_roofline,
+                        bench_scheduler, bench_serving,
                         bench_sharded_mining, bench_streaming)
 
 SUITES = {
@@ -55,6 +61,7 @@ SUITES = {
     "B9": ("policies", bench_policies.run),
     "B10": ("streaming", bench_streaming.run),
     "B11": ("algorithms", bench_algorithms.run),
+    "B12": ("async_serving", bench_async_serving.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
@@ -117,6 +124,14 @@ def _check_baselines(path, rows, factor, suite_names):
             regressed.append(
                 f"{row}: {walls[row]:.2f}us exceeds {limit:.1f}x the best "
                 f"explicit choice ({min(have):.2f}us)")
+    # no_worse rules: [a, b] pairs that must hold a <= b in the same run —
+    # like strictly_faster but with equality allowed (the async-p99-never-
+    # worse-than-closed-loop gate, where both sides can saturate)
+    for a, b in data.get("rules", {}).get("no_worse", []):
+        if a in walls and b in walls and walls[a] > walls[b]:
+            regressed.append(
+                f"{a}: {walls[a]:.2f}us must be no worse than "
+                f"{b}: {walls[b]:.2f}us")
     if unknown:
         print(f"# baseline has no entry for {len(unknown)} row(s) "
               f"(not gated): {', '.join(unknown)} — refresh with "

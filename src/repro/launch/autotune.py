@@ -24,6 +24,7 @@ import argparse
 from repro.kernels.autotune.cache import (DEFAULT_CACHE_PATH, AutotuneCache,
                                           device_kind)
 from repro.kernels.autotune.tuner import standard_shapes, tune_into
+from repro.launch.common import add_seed_arg
 from repro.launch.tuning import TUNABLE_KERNELS
 
 
@@ -60,7 +61,7 @@ def main():
     ap.add_argument("--max-configs", type=int, default=0,
                     help="truncate the roofline-ordered candidate list "
                          "(0 = sweep all)")
-    ap.add_argument("--seed", type=int, default=0)
+    add_seed_arg(ap)                # shared with the other launch CLIs
     ap.add_argument("--kernel", action="append", default=None,
                     choices=list(TUNABLE_KERNELS),
                     help="restrict to one kernel (repeatable)")

@@ -30,21 +30,12 @@ too).
 """
 from __future__ import annotations
 
-import argparse
 import os
 
-from repro.core.hetero import HeterogeneityProfile
 from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
 from repro.data.sparse import SparseSlab
+from repro.launch.common import PROFILES, standard_parser
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
-from repro.runtime import POLICY_NAMES
-
-
-PROFILES = {
-    "paper": HeterogeneityProfile.paper,
-    "homogeneous": lambda: HeterogeneityProfile.homogeneous(4, 200.0),
-    "straggler": lambda: HeterogeneityProfile.straggler(8, 2, 4.0),
-}
 
 
 def _make_dataset(dataset: str, n_tx: int, n_items: int, seed: int):
@@ -126,19 +117,7 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-tx", type=int, default=8192)
-    ap.add_argument("--n-items", type=int, default=128)
-    ap.add_argument("--min-support", type=float, default=0.02)
-    ap.add_argument("--min-confidence", type=float, default=0.6)
-    ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
-    ap.add_argument("--policy", default="static", choices=list(POLICY_NAMES),
-                    help="switching policy: plan once (static), closed-loop "
-                         "EWMA + speculation (dynamic), roofline-seeded "
-                         "costs (costmodel)")
-    ap.add_argument("--split", default="lpt",
-                    choices=["lpt", "proportional", "equal"],
-                    help="tile split strategy across the core profile")
+    ap = standard_parser()          # corpus / runtime / data-plane / seed
     ap.add_argument("--algorithm", default="apriori",
                     choices=["apriori", "eclat", "auto"],
                     help="mining formulation: horizontal bitmap (apriori), "
@@ -150,14 +129,6 @@ def main():
                          "low-frequency corpus via the CSR slab (the Eclat "
                          "path never builds the dense bitmap)")
     ap.add_argument("--n-tiles", type=int, default=32)
-    ap.add_argument("--data-plane", default="auto",
-                    choices=["auto", "pallas", "ref"])
-    ap.add_argument("--autotune", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="use the checked-in kernel winner cache for "
-                         "variant/tile selection (--no-autotune = "
-                         "roofline-seeded defaults)")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sharded", action="store_true",
                     help="execute on the distributed mining plane (shard_map)")
     ap.add_argument("--n-shards", type=int, default=0,

@@ -7,23 +7,33 @@ through the micro-batching :class:`RecommendationEngine` (admission via
 
   PYTHONPATH=src python -m repro.launch.recommend --n-tx 8192 --queries 2048
   PYTHONPATH=src python -m repro.launch.recommend --smoke
+  PYTHONPATH=src python -m repro.launch.recommend --async --target-qps 50 \\
+      --slo-ms 500
 
 ``--smoke`` shrinks the problem, serves a 1k-query trace on CPU and pins
 every batched top-k result to the brute-force Python oracle — a non-zero
 exit means the serving data plane and the rule list disagree.
+
+``--async`` drives the continuous-batching :class:`AsyncServer` instead of
+the closed-loop ``serve()``: requests are submitted open-loop at
+``--target-qps`` (Poisson arrivals) and drained through slot-based
+admission on the AOT-warmed bucket ladder, with ``--slo-ms`` arming the
+shedding governor.  ``--async --smoke`` additionally pins the async
+results bit-identical to the closed-loop oracle under BOTH the static and
+the dynamic switching policy — batching decisions must never change what
+gets recommended.
 """
 from __future__ import annotations
 
-import argparse
 import sys
 
 import numpy as np
 
 from repro.data.baskets import BasketConfig, generate_baskets
-from repro.launch.mine import PROFILES
+from repro.launch.common import PROFILES, standard_parser
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
-from repro.serving import (RecommendationEngine, RuleIndex, ServingConfig,
-                           recommend_bruteforce)
+from repro.serving import (AsyncServer, RecommendationEngine, RuleIndex,
+                           ServingConfig, recommend_bruteforce)
 
 
 def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
@@ -39,6 +49,64 @@ def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
     return queries, arrival
 
 
+def _recommend_async(make_engine, basket_cfg: BasketConfig, n_queries: int,
+                     seed: int, mean_gap_s: float, target_qps: float,
+                     rules, k: int, smoke: bool, policy: str):
+    """Open-loop leg of the CLI: submit/drain on the AsyncServer.
+
+    With ``--smoke`` the async results are pinned bit-identical to a
+    fresh closed-loop ``serve()`` run AND the brute-force oracle, under
+    both the static and the dynamic switching policy.
+    """
+    gap = (1.0 / target_qps) if target_qps > 0 else mean_gap_s
+    queries, arrival = synthetic_trace(basket_cfg, n_queries, seed + 101,
+                                       gap)
+    if arrival is None:
+        arrival = np.zeros(len(queries))
+    policies = ("static", "dynamic") if smoke else (policy,)
+    results = report = None
+    for pol in policies:
+        engine = make_engine(pol)
+        server = AsyncServer(engine)
+        handles = [server.submit(q, arrival_s=float(a))
+                   for q, a in zip(queries, arrival)]
+        server.drain()
+        report = server.take_report()
+        print(f"[recommend] async policy={pol} "
+              f"target={target_qps or 'unpaced'} QPS")
+        print(report.summary())
+        results = [h.result() if h.status == "done" else None
+                   for h in handles]
+
+        if smoke:
+            # the same trace through the closed-loop shim on a fresh
+            # engine must produce byte-for-byte the same recommendations
+            want, _ = make_engine(pol).serve(queries, arrival)
+            bad = 0
+            for h, got, w, q in zip(handles, results, want, queries):
+                if h.status != "done":
+                    continue
+                oracle = recommend_bruteforce(rules,
+                                              np.nonzero(q)[0].tolist(), k)
+                if got != w or got != oracle:
+                    bad += 1
+                    if bad <= 3:
+                        print(f"[recommend] ASYNC MISMATCH basket="
+                              f"{np.nonzero(q)[0].tolist()}\n  async  {got}"
+                              f"\n  closed {w}\n  oracle {oracle}",
+                              file=sys.stderr)
+            if bad:
+                print(f"[recommend] ASYNC SMOKE FAILED: {bad}/{len(queries)}"
+                      f" requests disagree with the closed-loop oracle "
+                      f"(policy={pol})", file=sys.stderr)
+                raise SystemExit(1)
+            print(f"[recommend] async smoke OK (policy={pol}): "
+                  f"{report.n_completed} async results bit-identical to "
+                  f"the closed loop and the brute-force oracle "
+                  f"({report.n_shed} shed)")
+    return results, report
+
+
 def recommend(n_tx: int = 8192, n_items: int = 128,
               min_support: float = 0.02, min_confidence: float = 0.6,
               profile_name: str = "paper", split: str = "lpt",
@@ -46,7 +114,8 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
               batch: int = 64, cache_size: int = 4096, seed: int = 0,
               mean_gap_s: float = 0.0, index_dir: str = "",
               smoke: bool = False, top: int = 8, policy: str = "static",
-              autotune: bool = True):
+              autotune: bool = True, use_async: bool = False,
+              target_qps: float = 0.0, slo_ms: float = 0.0):
     profile = PROFILES[profile_name]()
     basket_cfg = BasketConfig(n_tx=n_tx, n_items=n_items, seed=seed)
 
@@ -71,11 +140,20 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
 
     # 3. replay the synthetic query trace
     buckets = tuple(sorted({1, min(8, batch), batch}))
-    engine = RecommendationEngine(
-        index, profile,
-        ServingConfig(k=k, batch_buckets=buckets, data_plane=data_plane,
-                      cache_size=cache_size, policy=policy, split=split,
-                      autotune=autotune))
+
+    def make_engine(pol: str) -> RecommendationEngine:
+        return RecommendationEngine(
+            index, PROFILES[profile_name](),
+            ServingConfig(k=k, batch_buckets=buckets, data_plane=data_plane,
+                          cache_size=cache_size, policy=pol, split=split,
+                          autotune=autotune, slo_ms=slo_ms))
+
+    if use_async:
+        return _recommend_async(make_engine, basket_cfg, n_queries, seed,
+                                mean_gap_s, target_qps, result.rules, k,
+                                smoke, policy)
+
+    engine = make_engine(policy)
     queries, arrival = synthetic_trace(basket_cfg, n_queries, seed + 101,
                                        mean_gap_s)
     results, report = engine.serve(queries, arrival)
@@ -110,25 +188,7 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-tx", type=int, default=8192)
-    ap.add_argument("--n-items", type=int, default=128)
-    ap.add_argument("--min-support", type=float, default=0.02)
-    ap.add_argument("--min-confidence", type=float, default=0.6)
-    ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
-    ap.add_argument("--policy", default="static",
-                    choices=["static", "dynamic", "costmodel"],
-                    help="switching policy for mining and serving phases")
-    ap.add_argument("--split", default="lpt",
-                    choices=["lpt", "proportional", "equal"],
-                    help="tile split strategy across the core profile")
-    ap.add_argument("--data-plane", default="auto",
-                    choices=["auto", "pallas", "ref"])
-    ap.add_argument("--autotune", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="use the checked-in kernel winner cache for "
-                         "variant/tile selection (--no-autotune = "
-                         "roofline-seeded defaults)")
+    ap = standard_parser()          # corpus / runtime / data-plane / seed
     ap.add_argument("--queries", type=int, default=2048)
     ap.add_argument("--k", type=int, default=5)
     ap.add_argument("--batch", type=int, default=64,
@@ -139,9 +199,20 @@ def main():
                     help="mean simulated inter-arrival gap (0 = all at once)")
     ap.add_argument("--index-dir", default="",
                     help="persist the compiled index here (checkpoint store)")
-    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve open-loop through the continuous-batching "
+                         "AsyncServer (submit/poll/drain) instead of the "
+                         "closed-loop serve()")
+    ap.add_argument("--target-qps", type=float, default=0.0,
+                    help="open-loop Poisson arrival rate for --async "
+                         "(0 = unpaced, all requests at t=0)")
+    ap.add_argument("--slo-ms", type=float, default=0.0,
+                    help="latency budget for --async: the governor sheds "
+                         "requests projected to miss it (0 = never shed)")
     ap.add_argument("--smoke", action="store_true",
-                    help="small corpus, 1k queries, verify vs oracle")
+                    help="small corpus, 1k queries, verify vs oracle "
+                         "(with --async: pin async == closed-loop == oracle "
+                         "under static AND dynamic policies)")
     args = ap.parse_args()
     if args.smoke:
         args.n_tx, args.n_items, args.queries = 2048, 64, 1000
@@ -150,7 +221,8 @@ def main():
               args.profile, args.split, args.data_plane, args.queries,
               args.k, args.batch, args.cache_size, args.seed, args.mean_gap_s,
               args.index_dir, args.smoke, policy=args.policy,
-              autotune=args.autotune)
+              autotune=args.autotune, use_async=args.use_async,
+              target_qps=args.target_qps, slo_ms=args.slo_ms)
 
 
 if __name__ == "__main__":

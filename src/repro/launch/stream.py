@@ -15,15 +15,13 @@ index was refreshed monotonically and answers from the freshest rules.
 """
 from __future__ import annotations
 
-import argparse
 import sys
 
 import numpy as np
 
 from repro.data.baskets import BasketConfig, generate_baskets
-from repro.launch.mine import PROFILES
+from repro.launch.common import PROFILES, standard_parser
 from repro.pipeline import MarketBasketPipeline
-from repro.runtime import POLICY_NAMES
 from repro.serving import (RecommendationEngine, RuleIndex, ServingConfig,
                            recommend_bruteforce)
 from repro.streaming import StreamingConfig, StreamingMiner, TransactionStream
@@ -138,31 +136,13 @@ def stream(n_tx: int = 8192, n_items: int = 128, window: int = 2048,
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--n-tx", type=int, default=8192,
-                    help="total stream length (transactions)")
-    ap.add_argument("--n-items", type=int, default=128)
+    ap = standard_parser()          # corpus / runtime / data-plane / seed
     ap.add_argument("--window", type=int, default=2048,
                     help="sliding-window capacity (transactions)")
     ap.add_argument("--batch", type=int, default=128,
                     help="micro-batch size (transactions per arrival)")
     ap.add_argument("--batches", type=int, default=0,
                     help="stop after this many micro-batches (0 = all)")
-    ap.add_argument("--min-support", type=float, default=0.02)
-    ap.add_argument("--min-confidence", type=float, default=0.6)
-    ap.add_argument("--profile", default="paper", choices=sorted(PROFILES))
-    ap.add_argument("--policy", default="static", choices=list(POLICY_NAMES),
-                    help="switching policy for every streaming phase "
-                         "(--smoke checks static AND dynamic regardless)")
-    ap.add_argument("--split", default="lpt",
-                    choices=["lpt", "proportional", "equal"])
-    ap.add_argument("--data-plane", default="auto",
-                    choices=["auto", "pallas", "ref"])
-    ap.add_argument("--autotune", default=True,
-                    action=argparse.BooleanOptionalAction,
-                    help="use the checked-in kernel winner cache for "
-                         "variant/tile selection (--no-autotune = "
-                         "roofline-seeded defaults)")
     ap.add_argument("--n-tiles", type=int, default=8,
                     help="map tiles for full re-validation passes")
     ap.add_argument("--refresh-every", type=int, default=1,
@@ -172,7 +152,6 @@ def main():
                          "when the candidate lattice can change)")
     ap.add_argument("--serve-k", type=int, default=5,
                     help="recommendations per query on the live engine")
-    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: small stream; assert final state "
                          "bit-identical to a one-shot pipeline over the "

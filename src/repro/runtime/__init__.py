@@ -6,11 +6,12 @@ from repro.runtime.policies import (POLICY_NAMES, CostModelPolicy,
                                     DynamicPolicy, StaticPolicy,
                                     SwitchingPolicy, autotuned_costmodel,
                                     resolve_policy)
+from repro.runtime.report import LedgerTotals, PlaneReport
 from repro.runtime.runtime import MeasuredPhase, Runtime, resolve_power
 
 __all__ = [
     "POLICY_NAMES", "CostModelPolicy", "DynamicPolicy", "ExecLedger",
-    "MeasuredPhase", "PhaseRecord", "Runtime", "StaticPolicy",
-    "SwitchingPolicy", "autotuned_costmodel", "resolve_policy",
-    "resolve_power",
+    "LedgerTotals", "MeasuredPhase", "PhaseRecord", "PlaneReport",
+    "Runtime", "StaticPolicy", "SwitchingPolicy", "autotuned_costmodel",
+    "resolve_policy", "resolve_power",
 ]

@@ -23,6 +23,11 @@ Semantics, identical for every plane:
 * ``constraint_violated`` — ``assign_serial`` could not satisfy the
   task's ``min_speed`` and fell back to the fastest core (surfaced, never
   silent).
+* ``kind`` — ``"serial"`` (one core runs, the rest gate off), ``"map"``
+  (tiled across the profile), or ``"shed"`` (the async serving plane's
+  SLO governor rejected a request: the triage work is still scheduled on
+  one core and priced, so load shedding shows up in the energy/time
+  totals like every other phase instead of vanishing).
 """
 from __future__ import annotations
 
@@ -35,7 +40,7 @@ class PhaseRecord:
     """One scheduled phase: placement, modeled time, measured wall, energy."""
 
     name: str
-    kind: str                     # "serial" | "map"
+    kind: str                     # "serial" | "map" | "shed"
     policy: str = "static"        # switching policy that planned the phase
     cost_source: str = "bytes"    # where planning costs came from:
     #                               bytes | roofline | autotune

@@ -89,12 +89,16 @@ class Runtime:
     def run_serial(self, name: str, cost: float,
                    fn: Optional[Callable[[], Any]] = None,
                    device: Optional[int] = None,
-                   min_speed: float = 0.0):
+                   min_speed: float = 0.0,
+                   kind: str = "serial"):
         """Model (and optionally execute) a single-threaded phase.
 
         ``fn`` runs on the host and its wall time is recorded; ``device``
         pins the core (the sharded plane routes driver phases to rank 0).
-        Returns ``(fn result or None, PhaseRecord)``.
+        ``kind`` stamps the ledger record — serial-shaped work that is not
+        a plain driver phase (the async serving plane's SLO sheds) stays
+        distinguishable without a second accounting path.  Returns
+        ``(fn result or None, PhaseRecord)``.
         """
         task = TaskSpec(name, cost, parallel=False, min_speed=min_speed)
         asg = self.scheduler.assign_serial(task, device=device)
@@ -111,7 +115,7 @@ class Runtime:
         if self.power is not None:
             energy = self.power.energy(busy, sim_t, gated=asg.gated)
         rec = self.ledger.add(PhaseRecord(
-            name=name, kind="serial", policy=self.policy.name,
+            name=name, kind=kind, policy=self.policy.name,
             cost_source=getattr(self.policy, "cost_source", "bytes"),
             cost=cost,
             sim_time_s=sim_t, host_time_s=host_t, energy_j=energy,

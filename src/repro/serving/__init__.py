@@ -1,12 +1,29 @@
 """Online rule-serving plane: compiled rule index + batched recommendation
-engine (the query-side twin of ``repro.pipeline``)."""
+engine (the query-side twin of ``repro.pipeline``).
+
+Two ways to drive it, one loop underneath:
+
+* closed-loop — ``RecommendationEngine.serve(queries)`` replays a trace
+  (a compat shim over the continuous-batching loop, bit-identical to the
+  pre-redesign engine);
+* open-loop — ``submit(query) -> Handle`` / ``poll`` / ``drain`` on the
+  :class:`AsyncServer`: slot-based admission, AOT-warmed bucket ladder,
+  SLO-aware shedding, optional background drain thread.
+"""
+from repro.serving.admission import (BucketLadder, Handle, Query,
+                                     RequestQueue, ShedError, SloGovernor,
+                                     VirtualClock, WallClock)
 from repro.serving.cache import ResultCache, basket_key
-from repro.serving.engine import (RecommendationEngine, ServingConfig,
-                                  ServingReport)
+from repro.serving.engine import (QueryLike, RecommendationEngine,
+                                  ServingConfig, ServingReport)
 from repro.serving.index import RuleIndex
 from repro.serving.oracle import recommend_bruteforce
+from repro.serving.server import AsyncServer, AsyncServingReport
 
 __all__ = [
-    "RecommendationEngine", "ResultCache", "RuleIndex", "ServingConfig",
-    "ServingReport", "basket_key", "recommend_bruteforce",
+    "AsyncServer", "AsyncServingReport", "BucketLadder", "Handle", "Query",
+    "QueryLike", "RecommendationEngine", "RequestQueue", "ResultCache",
+    "RuleIndex", "ServingConfig", "ServingReport", "ShedError",
+    "SloGovernor", "VirtualClock", "WallClock", "basket_key",
+    "recommend_bruteforce",
 ]

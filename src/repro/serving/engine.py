@@ -26,6 +26,14 @@ each batch is one serial admission phase plus one parallel scoring phase
 totals are read off the ledger slice — the same semantics as the mining
 planes, including the spin-up rule that every core activated away from
 the admission core is a core switch.
+
+There is one serving loop: the continuous-batching
+:class:`~repro.serving.server.AsyncServer`.  ``submit``/``poll``/``drain``
+expose it directly for open-loop traffic; ``serve(queries)`` is a compat
+shim that replays a closed trace through a transient session on the same
+loop (virtual clock, slots = the largest bucket, SLO off) — which is why
+its results, ledger slices and latency percentiles are bit-identical to
+the pre-redesign engine.
 """
 from __future__ import annotations
 
@@ -40,15 +48,18 @@ import jax.numpy as jnp
 
 from repro.core.hetero import HeterogeneityProfile
 from repro.core.power import PowerModel
-from repro.core.scheduler import MBScheduler, TaskSpec
+from repro.core.scheduler import MBScheduler
 from repro.kernels.rule_match.ops import rule_topk
 from repro.pipeline.dataplane import resolve_backend
-from repro.runtime import (ExecLedger, MeasuredPhase, Runtime,
-                           SwitchingPolicy, autotuned_costmodel)
-from repro.serving.cache import Recommendation, ResultCache, basket_key
+from repro.runtime import (ExecLedger, Runtime, SwitchingPolicy,
+                           autotuned_costmodel)
+from repro.serving.admission import Handle, Query
+from repro.serving.cache import Recommendation, ResultCache
 from repro.serving.index import RuleIndex
 
-Query = Union[np.ndarray, Sequence[int]]
+# Any accepted request form: a Query object, a dict with an "items" key,
+# a plain item-id sequence, or a 0/1 bitmap row (the legacy alias).
+QueryLike = Union[Query, Dict, np.ndarray, Sequence[int]]
 
 
 @dataclass(frozen=True)
@@ -76,6 +87,15 @@ class ServingConfig:
     # satisfies it, assign_serial falls back to the fastest core and flags
     # the phase (surfaced as ServingReport.constraint_violations).
     admission_min_speed: float = 0.0
+    # Async serving (the submit/poll/drain surface and `recommend --async`):
+    # slots bounds how many queued requests one drain-loop step admits
+    # (None = the largest bucket); slo_ms > 0 arms the SLO governor, which
+    # sheds requests whose projected completion misses the budget;
+    # coalesce_wait_s bounds how long the threaded drain loop lets a burst
+    # accumulate before scoring a partial batch (never strands a request).
+    slots: Optional[int] = None
+    slo_ms: float = 0.0
+    coalesce_wait_s: float = 0.002
 
 
 @dataclass
@@ -102,6 +122,21 @@ class ServingReport:
     index_version: int = 0
     constraint_violations: int = 0  # admission phases below their min_speed
     ledger: Optional[ExecLedger] = None   # this call's phase records
+
+    # PlaneReport totals, read off the attached ledger slice.  Note
+    # total_time_s sums phase time only; sim_time_s additionally spans the
+    # arrival gaps the admission queue sat idle.
+    @property
+    def total_time_s(self) -> float:
+        return self.ledger.total_time_s if self.ledger else 0.0
+
+    @property
+    def total_energy_j(self) -> float:
+        return self.ledger.total_energy_j if self.ledger else 0.0
+
+    @property
+    def total_switches(self) -> int:
+        return self.ledger.total_switches if self.ledger else 0
 
     @property
     def qps(self) -> float:
@@ -172,6 +207,7 @@ class RecommendationEngine:
         self.power = self.runtime.power
         self.backend = resolve_backend(cfg.data_plane)
         self.cache = ResultCache(cfg.cache_size)
+        self._server = None           # persistent AsyncServer, built lazily
         self.index: RuleIndex = None  # set by refresh()
         self.refresh(index)
 
@@ -197,14 +233,17 @@ class RecommendationEngine:
         return index
 
     # ------------------------------------------------------------------
-    def _as_bits(self, query: Query) -> np.ndarray:
+    def _as_bits(self, query: QueryLike) -> np.ndarray:
         """Canonical 0/1 vector over the true item universe.
 
         Array inputs (numpy/jax rows) of full basket length are bitmaps;
         Python sequences (list/tuple/set) are always item-id collections —
         a list of 0/1 values is NOT treated as a bitmap, since a two-item
-        basket [0, 1] would be indistinguishable from one.
+        basket [0, 1] would be indistinguishable from one.  ``Query``
+        objects and ``{"items": ...}`` dicts are unwrapped first.
         """
+        if isinstance(query, (Query, dict)):
+            query = Query.of(query).payload
         n_items = self.index.n_items
         if not isinstance(query, (list, tuple, set, frozenset, range)):
             query = np.asarray(query)     # jax/device arrays -> host bitmap
@@ -243,12 +282,43 @@ class RecommendationEngine:
                  if s > 0.0] for r in range(len(rows))]
 
     # ------------------------------------------------------------------
-    def recommend(self, query: Query) -> Recommendation:
+    # the async surface: submit / poll / drain on a persistent open loop
+    # ------------------------------------------------------------------
+    @property
+    def server(self):
+        """The engine's persistent :class:`~repro.serving.server.AsyncServer`.
+
+        Created lazily in inline virtual-clock mode (``poll``/``drain``
+        advance the loop deterministically); call ``.start()`` on it — or
+        use it as a context manager — for threaded wall-clock serving.
+        """
+        if self._server is None:
+            from repro.serving.server import AsyncServer
+            self._server = AsyncServer(self)
+        return self._server
+
+    def submit(self, query: QueryLike,
+               arrival_s: Optional[float] = None) -> Handle:
+        """Enqueue one request on the open loop; returns its Handle."""
+        return self.server.submit(query, arrival_s=arrival_s)
+
+    def poll(self, handle: Handle) -> Optional[Recommendation]:
+        """Progress the open loop; the handle's result when done, else None."""
+        return self.server.poll(handle)
+
+    def drain(self, timeout: Optional[float] = None) -> List[Handle]:
+        """Run the open loop dry; handles completed since the last drain."""
+        return self.server.drain(timeout=timeout)
+
+    # ------------------------------------------------------------------
+    # the closed-loop surface (a replay session on the same loop)
+    # ------------------------------------------------------------------
+    def recommend(self, query: QueryLike) -> Recommendation:
         """Single-query convenience path (cached, batch of one)."""
         results, _ = self.serve([query])
         return results[0]
 
-    def serve(self, queries: Sequence[Query],
+    def serve(self, queries: Sequence[QueryLike],
               arrival_s: Optional[Sequence[float]] = None
               ) -> Tuple[List[Recommendation], ServingReport]:
         """Replay a query trace through the admission queue.
@@ -256,6 +326,12 @@ class RecommendationEngine:
         arrival_s (optional, non-decreasing, simulated seconds) drives the
         queueing model; default is all-at-once.  Returns per-request top-k
         recommendations (input order) and the ServingReport.
+
+        Compat shim: the trace runs through a transient
+        :class:`~repro.serving.server.AsyncServer` session (virtual clock,
+        slots = largest bucket, SLO governor off, no warmup) whose step
+        semantics match the original closed loop exactly — per-row scoring
+        is batch-independent, so results and accounting are bit-identical.
         """
         cfg = self.config
         rt = self.runtime
@@ -264,10 +340,7 @@ class RecommendationEngine:
         # orphaned records; this plane owns its runtime, so anything still
         # live belongs to no report — drop it before marking
         rt.ledger.take_since(0)
-        mark = rt.ledger.mark()
-        bits = [self._as_bits(q) for q in queries]
-        keys = [basket_key(b) for b in bits]
-        n = len(bits)
+        n = len(queries)
         if arrival_s is None:
             arrival = np.zeros(n)
         else:
@@ -278,83 +351,33 @@ class RecommendationEngine:
             if n and (np.diff(arrival) < 0).any():
                 raise ValueError("arrival_s must be non-decreasing")
 
-        report = ServingReport(backend=self.backend, policy=rt.policy.name,
-                               split=rt.split, k=cfg.k,
-                               n_queries=n, index_rows=self.index.n_rows,
-                               index_version=self.index.version)
-        results: List[Optional[Recommendation]] = [None] * n
-        latencies = np.zeros(n)
-        hits0, misses0 = self.cache.hits, self.cache.misses
-        fills: List[float] = []
-        max_bucket = self._buckets[-1]
-        per_query_cost = (cfg.score_unit_cost * self.index.n_rows_padded
-                          * self.index.n_items_padded)
-        t = 0.0
-        i = 0
-        while i < n:
-            t = max(t, arrival[i])
-            avail = i
-            while avail < n and arrival[avail] <= t:
-                avail += 1
-            batch_n = min(avail - i, max_bucket)
-            bucket = next(b for b in self._buckets if b >= batch_n)
+        from repro.serving.server import AsyncServer
+        session = AsyncServer(self, slots=self._buckets[-1], slo_ms=0.0,
+                              coalesce_wait_s=0.0, warm=False)
+        # submit everything up front (validation happens here, before any
+        # phase runs — same all-or-nothing contract as the original loop),
+        # then run the session dry on the virtual clock
+        handles = [session.submit(q, arrival_s=float(arrival[j]))
+                   for j, q in enumerate(queries)]
+        session.drain()
+        arep = session.take_report()
 
-            miss_idx = []
-            for j in range(i, i + batch_n):
-                cached = self.cache.get(keys[j])
-                if cached is not None:
-                    results[j] = cached
-                else:
-                    miss_idx.append(j)
-
-            # serial admission/dispatch: best core runs, the rest gate off
-            _, adm = rt.run_serial(
-                f"serve-admit-{report.n_batches}",
-                cost=max(1.0, bucket * cfg.admission_unit_cost),
-                min_speed=cfg.admission_min_speed)
-            t_serial = adm.sim_time_s
-
-            makespan = 0.0
-            if miss_idx:
-                # parallel scoring: the padded bucket is what the data plane
-                # runs, so every slot is a schedulable tile
-                task = TaskSpec(f"serve-score-{report.n_batches}",
-                                cost=bucket * per_query_cost, parallel=True,
-                                n_tiles=bucket, family="serve-score")
-
-                def execute(_asg, _costs, rows=miss_idx, b=bucket):
-                    return MeasuredPhase(result=self._score_batch(
-                        [bits[j] for j in rows], b))
-
-                # each core spun up away from the admission core is a switch
-                recs, score_rec = rt.run_phase(task, execute,
-                                               spinup_from=adm.device)
-                makespan = score_rec.sim_time_s
-                for j, rec in zip(miss_idx, recs):
-                    results[j] = rec
-                    self.cache.put(keys[j], rec)
-
-            t_done = t + t_serial + makespan
-            for j in range(i, i + batch_n):
-                latencies[j] = t_done - arrival[j]
-            fills.append(batch_n / bucket)
-            report.bucket_counts[bucket] = \
-                report.bucket_counts.get(bucket, 0) + 1
-            report.n_batches += 1
-            t = t_done
-            i += batch_n
-
-        report.cache_hits = self.cache.hits - hits0
-        report.cache_misses = self.cache.misses - misses0
-        report.sim_time_s = t
-        report.batch_fill = float(np.mean(fills)) if fills else 0.0
-        if n:
-            report.p50_latency_s = float(np.percentile(latencies, 50))
-            report.p99_latency_s = float(np.percentile(latencies, 99))
-        report.ledger = rt.ledger.take_since(mark)
+        results = [h.result() for h in handles]
+        report = ServingReport(
+            backend=self.backend, policy=rt.policy.name, split=rt.split,
+            k=cfg.k, n_queries=n, index_rows=self.index.n_rows,
+            index_version=self.index.version, n_batches=arep.n_steps,
+            bucket_counts=dict(arep.bucket_counts),
+            batch_fill=arep.batch_fill, cache_hits=arep.cache_hits,
+            cache_misses=arep.cache_misses,
+            sim_time_s=session.clock.now(), ledger=arep.ledger)
         report.energy_j = report.ledger.total_energy_j
         report.switches = report.ledger.total_switches
         report.constraint_violations = \
             len(report.ledger.constraint_violations())
+        if n:
+            latencies = np.array([h.latency_s for h in handles])
+            report.p50_latency_s = float(np.percentile(latencies, 50))
+            report.p99_latency_s = float(np.percentile(latencies, 99))
         report.wall_time_s = time.perf_counter() - t_wall
         return results, report
