@@ -2,7 +2,8 @@
 and data-plane comparison on the paper's heterogeneous four-core system.
 
 Emits ``name,us_per_call,derived`` CSV rows; derived varies per row
-(itemsets, rules, simulated speedup, energy).
+(itemsets, rules, simulated speedup, energy).  Wall rows carry the run's
+transfer ledger (h2d_bytes, d2h_bytes, syncs) as extra columns.
 """
 import time
 
@@ -29,8 +30,10 @@ def run(csv_rows):
         # map phases only: serial phases are policy-invariant, and this is
         # the ratio comparable to the paper's 2.50x analytic bound
         sims[split] = res.report.map_time_s
+        led = res.report.ledger
         csv_rows.append((f"pipeline_{split}_wall", wall_us,
-                         res.report.n_itemsets))
+                         res.report.n_itemsets, led.total_h2d_bytes,
+                         led.total_d2h_bytes, led.total_syncs))
         csv_rows.append((f"pipeline_{split}_sim_makespan_us",
                          res.report.total_time_s * 1e6,
                          res.report.total_energy_j))
@@ -45,15 +48,17 @@ def run(csv_rows):
         t0 = time.perf_counter()
         res = pipe.run(T)
         wall_us = (time.perf_counter() - t0) * 1e6
+        led = res.report.ledger
         csv_rows.append((f"pipeline_ntx{n_tx}_wall", wall_us,
-                         res.report.n_rules))
+                         res.report.n_rules, led.total_h2d_bytes,
+                         led.total_d2h_bytes, led.total_syncs))
 
     # data plane: jitted ref vs autotuned Pallas (interpret off-TPU).  The
     # baselines hold pallas *strictly faster* than ref, so measure like the
     # tuner does: warm both, interleave the reps (drift hits both planes
     # equally), report the median
     T = generate_baskets(BasketConfig(n_tx=4096, n_items=128, seed=2))
-    pipes, walls, itemsets = {}, {}, {}
+    pipes, walls, reports = {}, {}, {}
     for plane in ("ref", "pallas"):
         pipes[plane] = MarketBasketPipeline(
             profile, PipelineConfig(min_support=0.02, n_tiles=16,
@@ -65,7 +70,10 @@ def run(csv_rows):
             t0 = time.perf_counter()
             res = pipe.run(T)
             walls[plane].append((time.perf_counter() - t0) * 1e6)
-            itemsets[plane] = res.report.n_itemsets
+            reports[plane] = res.report
     for plane in ("ref", "pallas"):
+        led = reports[plane].ledger
         csv_rows.append((f"pipeline_dataplane_{plane}_wall",
-                         float(np.median(walls[plane])), itemsets[plane]))
+                         float(np.median(walls[plane])),
+                         reports[plane].n_itemsets, led.total_h2d_bytes,
+                         led.total_d2h_bytes, led.total_syncs))

@@ -1,0 +1,57 @@
+"""B13 — device-resident round execution: pipelined (async tile dispatch,
+donated slabs, on-device candgen, one d2h per counting round) vs the legacy
+per-tile-sync baseline on the same corpus and tiling.
+
+The corpus is pattern-rich (planted length-5 patterns) so the lattice runs
+deep: the per-round costs the pipelined path eliminates — one readback per
+tile, the host candidate join, the candidate-bitmap re-upload — repeat
+across rounds while the counting matmuls stay identical, which is exactly
+the regime the paper's round pipeline targets.  Measured like B6's plane
+duel: warm both modes, interleave the reps so drift hits both equally,
+report the median.  The baselines gate holds pipelined *strictly faster*;
+tests/test_round_exec.py asserts the one-sync-per-round contract itself.
+
+Rows carry the transfer ledger (h2d_bytes, d2h_bytes, syncs) so the CSV
+shows the transfer asymmetry next to the wall-clock it buys.
+"""
+import time
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.baskets import BasketConfig, generate_baskets
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+
+MODES = ("pipelined", "per_tile")
+
+
+def run(csv_rows):
+    profile = HeterogeneityProfile.paper()
+    T = generate_baskets(BasketConfig(n_tx=4096, n_items=96, n_patterns=8,
+                                      pattern_len=5, pattern_prob=0.35,
+                                      seed=11))
+    pipes, walls, reports = {}, {m: [] for m in MODES}, {}
+    for mode in MODES:
+        pipes[mode] = MarketBasketPipeline(
+            profile, PipelineConfig(min_support=0.03, n_tiles=64,
+                                    round_execution=mode))
+        pipes[mode].run(T)                # warm the jit caches
+    for _ in range(5):
+        for mode, pipe in pipes.items():
+            t0 = time.perf_counter()
+            res = pipe.run(T)
+            walls[mode].append((time.perf_counter() - t0) * 1e6)
+            reports[mode] = res.report
+    assert (reports["pipelined"].n_itemsets
+            == reports["per_tile"].n_itemsets), \
+        "round-execution modes diverged — bench refuses to time wrong answers"
+    for mode in MODES:
+        led = reports[mode].ledger
+        csv_rows.append((f"round_exec_{mode}_wall",
+                         float(np.median(walls[mode])),
+                         reports[mode].n_itemsets, led.total_h2d_bytes,
+                         led.total_d2h_bytes, led.total_syncs))
+    # the transfer asymmetry the wall-clock gap comes from
+    csv_rows.append(("round_exec_sync_reduction", 0.0,
+                     reports["per_tile"].ledger.total_syncs
+                     / max(1, reports["pipelined"].ledger.total_syncs)))

@@ -14,7 +14,7 @@ import numpy as np
 from repro.core.hetero import HeterogeneityProfile
 from repro.data.baskets import BasketConfig, generate_baskets
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
-from repro.serving import RecommendationEngine, RuleIndex, ServingConfig
+from repro.serving import Query, RecommendationEngine, RuleIndex, ServingConfig
 
 
 def _mine_index(n_items=64):
@@ -29,7 +29,7 @@ def _trace(n_items=64, n_unique=128, repeats=4):
     """n_unique distinct baskets repeated `repeats` times: the repeated
     tail is what the result cache can win on."""
     Q = generate_baskets(BasketConfig(n_tx=n_unique, n_items=n_items, seed=7))
-    return [row for row in Q] * repeats
+    return [Query.of(row) for row in Q] * repeats
 
 
 def run(csv_rows):

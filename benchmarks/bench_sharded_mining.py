@@ -103,10 +103,12 @@ def run(csv_rows):
         miner = ShardedMiner(
             mesh=make_shard_mesh(n),
             profile=HeterogeneityProfile.homogeneous(n, 200.0), config=cfg)
-        wall_us, _ = _timed_run(miner, T)
+        wall_us, res = _timed_run(miner, T)
         base_us = base_us or wall_us
+        led = res.report.ledger
         csv_rows.append((f"sharded_mining_s{n}_e2e_wall", wall_us,
-                         base_us / wall_us))
+                         base_us / wall_us, led.total_h2d_bytes,
+                         led.total_d2h_bytes, led.total_syncs))
 
     # ---- heterogeneous split at max mesh size ---------------------------
     # wall time runs on equal silicon (forced host devices), so the
@@ -122,5 +124,7 @@ def run(csv_rows):
     n_map_rounds = sum(1 for r in res.report.rounds if r.n_tiles)
     equal_modeled = (n_map_rounds * rows_equal * items_padded
                      / float(profile.speeds.min()))
+    led = res.report.ledger
     csv_rows.append((f"sharded_mining_s{n}_hetero_wall", wall_us,
-                     equal_modeled / hetero_modeled))
+                     equal_modeled / hetero_modeled, led.total_h2d_bytes,
+                     led.total_d2h_bytes, led.total_syncs))

@@ -24,6 +24,8 @@ from typing import List, Tuple
 
 import numpy as np
 
+from repro.serving import Query
+
 
 def poisson_arrivals(n: int, rate_qps: float, seed: int = 0) -> np.ndarray:
     """n arrival instants with exponential inter-arrival gaps (Poisson
@@ -61,8 +63,8 @@ def bursty_arrivals(n: int, rate_qps: float, burst_factor: float = 8.0,
 
 
 def zipf_queries(n: int, n_items: int, alpha: float = 1.2,
-                 mean_len: float = 3.0, seed: int = 0) -> List[List[int]]:
-    """n baskets (item-id lists) over a Zipf(``alpha``) item popularity.
+                 mean_len: float = 3.0, seed: int = 0) -> List[Query]:
+    """n basket queries over a Zipf(``alpha``) item popularity.
 
     Head items recur across baskets — the repeated-basket tail a result
     cache wins on and the realistic skew for coalesced batches.  Basket
@@ -75,8 +77,9 @@ def zipf_queries(n: int, n_items: int, alpha: float = 1.2,
     queries = []
     for _ in range(n):
         size = min(1 + rng.poisson(max(mean_len - 1.0, 0.0)), n_items)
-        queries.append(sorted(rng.choice(n_items, size=size, replace=False,
-                                         p=p).tolist()))
+        queries.append(Query.of(
+            sorted(rng.choice(n_items, size=size, replace=False,
+                              p=p).tolist())))
     return queries
 
 
@@ -84,7 +87,7 @@ def open_loop_trace(n: int, n_items: int, rate_qps: float,
                     pattern: str = "poisson", alpha: float = 1.2,
                     mean_len: float = 3.0, burst_factor: float = 8.0,
                     burst_len: int = 16, seed: int = 0
-                    ) -> Tuple[List[List[int]], np.ndarray]:
+                    ) -> Tuple[List[Query], np.ndarray]:
     """(queries, arrival_s) for one open-loop run; ``pattern`` is
     ``poisson`` or ``bursty``."""
     if pattern == "poisson":

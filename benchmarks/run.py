@@ -25,6 +25,10 @@
                              + p99-under-load vs the closed-loop
                              per-request baseline; the async-strictly-
                              higher-QPS and p99-no-worse gates)
+  B13 bench_round_exec     — device-resident round execution: pipelined
+                             (async dispatch, donated slabs, on-device
+                             candgen, one d2h per round) vs per-tile-sync
+                             (the pipelined-strictly-faster gate)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -46,7 +50,7 @@ import sys
 from benchmarks import (bench_algorithms, bench_apriori,
                         bench_async_serving, bench_kernels, bench_pipeline,
                         bench_policies, bench_power, bench_roofline,
-                        bench_scheduler, bench_serving,
+                        bench_round_exec, bench_scheduler, bench_serving,
                         bench_sharded_mining, bench_streaming)
 
 SUITES = {
@@ -62,6 +66,7 @@ SUITES = {
     "B10": ("streaming", bench_streaming.run),
     "B11": ("algorithms", bench_algorithms.run),
     "B12": ("async_serving", bench_async_serving.run),
+    "B13": ("round_exec", bench_round_exec.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
@@ -80,7 +85,7 @@ def _update_baselines(path, rows):
     data.setdefault("meta", {})
     data["meta"]["refresh"] = "python -m benchmarks.run --update-baselines"
     base = data.setdefault("us_per_call", {})
-    for name, us, _ in rows:
+    for name, us, *_ in rows:
         if us > 0 and not name.endswith("_FAILED"):
             base[name] = round(us, 2)
     with open(path, "w") as f:
@@ -95,7 +100,7 @@ def _check_baselines(path, rows, factor, suite_names):
     regressed, unknown = [], []
     measured = set()
     walls = {}
-    for name, us, _ in rows:
+    for name, us, *_ in rows:
         if us <= 0 or name.endswith("_FAILED"):
             continue
         measured.add(name)
@@ -182,9 +187,14 @@ def main() -> None:
             rows.append((f"{name}_FAILED", 0.0, 0.0))
             failed.append(sid)
             print(f"# {sid} {name} failed: {e}", file=sys.stderr)
-    print("name,us_per_call,derived")
-    for name, us, derived in rows:
-        print(f"{name},{us:.2f},{derived:.4f}")
+    # rows are (name, us, derived) or, for transfer-instrumented suites
+    # (B6/B8/B13), (name, us, derived, h2d_bytes, d2h_bytes, syncs); the
+    # CSV always carries the transfer columns (zeros when unmeasured)
+    print("name,us_per_call,derived,h2d_bytes,d2h_bytes,syncs")
+    for row in rows:
+        name, us, derived = row[:3]
+        h2d, d2h, syncs = row[3:] if len(row) > 3 else (0, 0, 0)
+        print(f"{name},{us:.2f},{derived:.4f},{h2d},{d2h},{syncs}")
 
     if args.update_baselines:
         _update_baselines(args.update_baselines, rows)

@@ -48,8 +48,8 @@ for r in best.rules[:8]:
 
 # 5. online serving: compile the rules into a device-resident index and
 #    answer "given this basket, which items next?" in scheduled batches
-from repro.serving import RecommendationEngine, RuleIndex
+from repro.serving import Query, RecommendationEngine, RuleIndex
 
 engine = RecommendationEngine(RuleIndex.build(best.rules, T.shape[1]), profile)
-recs, serving = engine.serve(list(T[:64]))
+recs, serving = engine.serve([Query.of(row) for row in T[:64]])
 print("\n" + serving.summary())

@@ -128,18 +128,22 @@ def apriori(T: np.ndarray, min_support: int, *,
     n_tx, n_items = T.shape
     if cluster is None:
         cluster = SimulatedCluster(HeterogeneityProfile.paper())
-    tiles = _tile_rows(T, n_tiles)
+    # hoist the tile uploads: one h2d per tile for the whole mine, and all
+    # per-tile map results stay device-resident until the round's single
+    # np.asarray readback below (same contract as the pipeline plane)
+    tiles = [jnp.asarray(t) for t in _tile_rows(T, n_tiles)]
     supports: Dict[Tuple[int, ...], int] = {}
     reports = []
 
     # ---- step 1: item frequency (<item, count>) ----
     job1 = MapReduceJob(
         name="mba-step1-item-counts",
-        map_fn=lambda tile: np.asarray(tile, dtype=np.int64).sum(axis=0),
+        map_fn=lambda tile: tile.sum(axis=0, dtype=jnp.int32),
         combine_fn=lambda a, b: a + b,
-        zero_fn=lambda: np.zeros(n_items, dtype=np.int64),
+        zero_fn=lambda: jnp.zeros(n_items, dtype=jnp.int32),
     )
     counts, rep = cluster.run(job1, tiles, failures=failures)
+    counts = np.asarray(counts, dtype=np.int64)
     reports.append(("k=1", rep))
     frequent = [(int(i),) for i in np.nonzero(counts >= min_support)[0]]
     for (i,) in frequent:
@@ -155,16 +159,16 @@ def apriori(T: np.ndarray, min_support: int, *,
         Cj = jnp.asarray(C)
 
         def map_fn(tile, Cj=Cj):
-            return np.asarray(support_counts(jnp.asarray(tile), Cj,
-                                             use_pallas=use_pallas))
+            return support_counts(tile, Cj, use_pallas=use_pallas)
 
         job = MapReduceJob(
             name=f"mba-step2-support-k{k}",
             map_fn=map_fn,
             combine_fn=lambda a, b: a + b,
-            zero_fn=lambda m=len(cands): np.zeros(m, dtype=np.int64),
+            zero_fn=lambda m=len(cands): jnp.zeros(m, dtype=jnp.int32),
         )
         sup, rep = cluster.run(job, tiles, failures=failures)
+        sup = np.asarray(sup, dtype=np.int64)   # the round's one readback
         reports.append((f"k={k}", rep))
         frequent = []
         for c, s in zip(cands, sup):

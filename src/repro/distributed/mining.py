@@ -307,6 +307,9 @@ class ShardedMiner:
         def execute(_asg, _costs):
             result, rep = run_sharded(job, data, self.mesh, self.axis,
                                       extra_args=extra_args)
+            # the psum-reduced vector comes back host-side here, inside the
+            # phase, so the round's single sync lands on this map record
+            result = self.runtime.meter.d2h(result, dtype=np.int64)
             return MeasuredPhase(result=result, wall_s=rep.makespan)
 
         return self.runtime.run_phase(
@@ -357,7 +360,7 @@ class ShardedMiner:
         self.scheduler.switches += switches + reissued
         report.replans += 1
         report.shard_rows = [int(r) for r in new_plan.rows]
-        return (new_plan, jnp.asarray(shard_bitmap(T, new_plan)),
+        return (new_plan, self.runtime.meter.h2d(shard_bitmap(T, new_plan)),
                 switches, reissued, newly_dead)
 
     def _check_round(self, k: int, T: np.ndarray, C_padded: Optional[np.ndarray],
@@ -431,7 +434,7 @@ class ShardedMiner:
         alive = np.ones(n, dtype=bool)
         plan = plan_shards(self.profile, n_tx, row_block=self.row_block,
                            alive=alive)
-        data = jnp.asarray(shard_bitmap(T, plan))
+        data = rt.meter.h2d(shard_bitmap(T, plan))
 
         report = PipelineReport(
             backend=self.backend, policy=rt.policy.name, split=rt.split,
@@ -447,10 +450,9 @@ class ShardedMiner:
             1, faults, alive, plan, T, report)
         if new_data is not None:
             data = new_data
-        counts_dev, rec = self._sharded_round(
+        counts, rec = self._sharded_round(
             self._item_job(n_items), data, plan, n_items,
             switches=sw, reissued=re)
-        counts = np.asarray(counts_dev, dtype=np.int64)
         if self.verify_rounds:
             self._check_round(1, T, None, counts)
         frequent = [(int(i),) for i in np.nonzero(
@@ -488,13 +490,13 @@ class ShardedMiner:
 
             C = pad_candidates(itemsets_to_bitmap(cands, n_items),
                                cfg.m_bucket)
-            Cj = jnp.asarray(C)
-            sup_dev, rec = self._sharded_round(
+            Cj = rt.meter.h2d(C)
+            sup_all, rec = self._sharded_round(
                 self._support_job(C.shape[0]), data, plan, n_items,
                 extra_args=(Cj,), switches=sw, reissued=re)
             # padded candidate rows are all-zero masks and would match every
             # transaction — slice to the true count, never trust padding
-            sup = np.asarray(sup_dev, dtype=np.int64)[:len(cands)]
+            sup = sup_all[:len(cands)]
             if self.verify_rounds:
                 self._check_round(k, T, C, sup)
             frequent = []
@@ -563,7 +565,7 @@ class ShardedMiner:
         alive = np.ones(n, dtype=bool)
         plan = plan_shards(self.profile, Tw.shape[0], row_block=1,
                            alive=alive)
-        data = jnp.asarray(shard_bitmap(Tw, plan))
+        data = rt.meter.h2d(shard_bitmap(Tw, plan))
         word_bytes = 4 * n_items_pad              # cost units: real-row bytes
 
         report = PipelineReport(
@@ -581,10 +583,9 @@ class ShardedMiner:
             1, faults, alive, plan, Tw, report, row_block=1)
         if new_data is not None:
             data = new_data
-        counts_dev, rec = self._sharded_round(
+        counts, rec = self._sharded_round(
             self._eclat_job(n_items_pad, 1), data, plan, word_bytes,
             switches=sw, reissued=re)
-        counts = np.asarray(counts_dev, dtype=np.int64)
         if self.verify_rounds:
             self._check_round(1, T_dense, None, counts[:n_items_raw])
         frequent = [(int(i),) for i in np.nonzero(
@@ -622,10 +623,10 @@ class ShardedMiner:
             Cidx = np.zeros((-(-len(cands) // cfg.m_bucket) * cfg.m_bucket,
                              k), dtype=np.int32)
             Cidx[:len(cands)] = np.asarray(cands, dtype=np.int32)
-            sup_dev, rec = self._sharded_round(
+            sup_all, rec = self._sharded_round(
                 self._eclat_job(Cidx.shape[0], k), data, plan, word_bytes,
-                extra_args=(jnp.asarray(Cidx),), switches=sw, reissued=re)
-            sup = np.asarray(sup_dev, dtype=np.int64)[:len(cands)]
+                extra_args=(rt.meter.h2d(Cidx),), switches=sw, reissued=re)
+            sup = sup_all[:len(cands)]
             if self.verify_rounds:
                 self._check_round(
                     k, T_dense,

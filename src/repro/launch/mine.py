@@ -30,6 +30,7 @@ too).
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
@@ -54,7 +55,8 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          seed: int = 0, top: int = 15, sharded: bool = False,
          n_shards: int = 0, smoke: bool = False, policy: str = "static",
          autotune: bool = True, algorithm: str = "apriori",
-         dataset: str = "dense"):
+         dataset: str = "dense", round_execution: str = "pipelined",
+         profile_dir: str = ""):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 2048), min(n_items, 64)
 
@@ -63,8 +65,16 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
                             min_confidence=min_confidence,
                             n_tiles=n_tiles, policy=policy, split=split,
                             data_plane=data_plane, autotune=autotune,
-                            algorithm=algorithm)
+                            algorithm=algorithm,
+                            round_execution=round_execution)
     choice = None
+    if profile_dir:
+        # one device-level trace of the whole mine (dispatch overlap, the
+        # single d2h per round) — view with tensorboard or Perfetto
+        import jax
+        trace_ctx = jax.profiler.trace(profile_dir)
+    else:
+        trace_ctx = contextlib.nullcontext()
 
     if sharded:
         from repro.distributed.mining import (ShardedMiner, make_shard_mesh,
@@ -77,7 +87,8 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
               f"split={split} algorithm={algorithm}")
         miner = ShardedMiner(mesh=mesh, profile=profile, config=config,
                              verify_rounds=smoke)
-        result = miner.run(T)
+        with trace_ctx:
+            result = miner.run(T)
         choice = miner.algorithm_choice
     else:
         from repro.mining import make_miner
@@ -85,7 +96,8 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
         print(f"[mine] profile={profile_name} speeds={profile.speeds.tolist()} "
               f"policy={policy} split={split} algorithm={algorithm}")
         miner, choice = make_miner(T, profile=profile, config=config)
-        result = miner.run(T)
+        with trace_ctx:
+            result = miner.run(T)
 
     if choice is not None:
         print(f"[mine] {choice.summary()}")
@@ -129,6 +141,14 @@ def main():
                          "low-frequency corpus via the CSR slab (the Eclat "
                          "path never builds the dense bitmap)")
     ap.add_argument("--n-tiles", type=int, default=32)
+    ap.add_argument("--round-execution", default="pipelined",
+                    choices=["pipelined", "per_tile"],
+                    help="pipelined = async tile dispatch, donated slabs, "
+                         "one d2h per counting round; per_tile = legacy "
+                         "host readback per tile")
+    ap.add_argument("--profile-dir", default="",
+                    help="write a jax.profiler device trace of the mine "
+                         "here (tensorboard/Perfetto format)")
     ap.add_argument("--sharded", action="store_true",
                     help="execute on the distributed mining plane (shard_map)")
     ap.add_argument("--n-shards", type=int, default=0,
@@ -147,7 +167,9 @@ def main():
          args.profile, args.split, args.n_tiles, args.data_plane, args.seed,
          sharded=args.sharded, n_shards=args.n_shards, smoke=args.smoke,
          policy=args.policy, autotune=args.autotune,
-         algorithm=args.algorithm, dataset=args.dataset)
+         algorithm=args.algorithm, dataset=args.dataset,
+         round_execution=args.round_execution,
+         profile_dir=args.profile_dir)
 
 
 if __name__ == "__main__":

@@ -32,8 +32,8 @@ import numpy as np
 from repro.data.baskets import BasketConfig, generate_baskets
 from repro.launch.common import PROFILES, standard_parser
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
-from repro.serving import (AsyncServer, RecommendationEngine, RuleIndex,
-                           ServingConfig, recommend_bruteforce)
+from repro.serving import (AsyncServer, Query, RecommendationEngine,
+                           RuleIndex, ServingConfig, recommend_bruteforce)
 
 
 def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
@@ -42,7 +42,7 @@ def synthetic_trace(cfg: BasketConfig, n_queries: int, seed: int,
     (fresh seed), with optional exponential inter-arrival gaps."""
     Q = generate_baskets(BasketConfig(**{**cfg.__dict__, "n_tx": n_queries,
                                          "seed": seed}))
-    queries = [row for row in Q]
+    queries = [Query.of(row) for row in Q]
     rng = np.random.default_rng(seed + 1)
     arrival = (np.cumsum(rng.exponential(mean_gap_s, n_queries))
                if mean_gap_s > 0 else None)
@@ -87,12 +87,12 @@ def _recommend_async(make_engine, basket_cfg: BasketConfig, n_queries: int,
                 if h.status != "done":
                     continue
                 oracle = recommend_bruteforce(rules,
-                                              np.nonzero(q)[0].tolist(), k)
+                                              np.nonzero(q.payload)[0].tolist(), k)
                 if got != w or got != oracle:
                     bad += 1
                     if bad <= 3:
                         print(f"[recommend] ASYNC MISMATCH basket="
-                              f"{np.nonzero(q)[0].tolist()}\n  async  {got}"
+                              f"{np.nonzero(q.payload)[0].tolist()}\n  async  {got}"
                               f"\n  closed {w}\n  oracle {oracle}",
                               file=sys.stderr)
             if bad:
@@ -171,12 +171,12 @@ def recommend(n_tx: int = 8192, n_items: int = 128,
         bad = 0
         for q, got in zip(queries, results):
             want = recommend_bruteforce(result.rules,
-                                        np.nonzero(q)[0].tolist(), k)
+                                        np.nonzero(q.payload)[0].tolist(), k)
             if got != want:
                 bad += 1
                 if bad <= 3:
                     print(f"[recommend] MISMATCH basket="
-                          f"{np.nonzero(q)[0].tolist()}\n  got  {got}"
+                          f"{np.nonzero(q.payload)[0].tolist()}\n  got  {got}"
                           f"\n  want {want}", file=sys.stderr)
         if bad:
             print(f"[recommend] SMOKE FAILED: {bad}/{len(queries)} queries "

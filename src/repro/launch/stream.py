@@ -22,8 +22,8 @@ import numpy as np
 from repro.data.baskets import BasketConfig, generate_baskets
 from repro.launch.common import PROFILES, standard_parser
 from repro.pipeline import MarketBasketPipeline
-from repro.serving import (RecommendationEngine, RuleIndex, ServingConfig,
-                           recommend_bruteforce)
+from repro.serving import (Query, RecommendationEngine, RuleIndex,
+                           ServingConfig, recommend_bruteforce)
 from repro.streaming import StreamingConfig, StreamingMiner, TransactionStream
 
 
@@ -118,7 +118,7 @@ def stream(n_tx: int = 8192, n_items: int = 128, window: int = 2048,
         for _ in range(32):
             basket = sorted(rng.choice(n_items, size=3, replace=False)
                             .tolist())
-            got = engine.recommend(basket)
+            got = engine.recommend(Query.of(basket))
             want = recommend_bruteforce(miner.rules, basket,
                                         engine.config.k)
             assert got == want, (basket, got, want)

@@ -47,8 +47,8 @@ from repro.pipeline.pipeline import (Baskets, PipelineConfig, PipelineResult,
                                      candgen_cost, ingest_baskets)
 from repro.pipeline.dataplane import resolve_backend
 from repro.pipeline.report import PipelineReport, RoundReport
-from repro.runtime import (MeasuredPhase, Runtime, SwitchingPolicy,
-                           autotuned_costmodel)
+from repro.runtime import (MeasuredPhase, Runtime, SlabPool, SwitchingPolicy,
+                           autotuned_costmodel, donated_add, donated_and)
 
 _jitted_intersect_ref = jax.jit(intersect_count_ref)
 
@@ -96,6 +96,8 @@ class EclatMiner:
         self.backend = resolve_backend(cfg.data_plane)
         self.interpret = cfg.interpret
         self.tuning = None if cfg.autotune else False
+        # round-persistent donated count accumulators (pipelined rounds)
+        self.slabs = SlabPool()
 
     # ------------------------------------------------------------------
     # vertical data plane
@@ -141,25 +143,58 @@ class EclatMiner:
 
     def _map_round(self, name: str, A: jnp.ndarray, B: jnp.ndarray,
                    m_true: int, failures: Optional[List[FailureEvent]]):
-        """One tiled intersection phase through the shared runtime."""
+        """One tiled intersection phase through the shared runtime.
+
+        Pipelined (default): every tile scatters its device counts into a
+        tile-offset window of an [m_pad] vector, partials fold into a
+        donated slab accumulator, and the round reads back one sliced
+        vector — one sync.  ``per_tile`` keeps the legacy readback per
+        tile (the B13 baseline)."""
         tiles = self._pair_tiles(A, B)
         n_words = A.shape[1]
+        meter = self.runtime.meter
+        pipelined = self.config.round_execution == "pipelined"
 
-        def tile_counts(tile) -> np.ndarray:
-            off, Aj, Bj = tile
-            counts = np.asarray(self._count(Aj, Bj), dtype=np.int64)
-            out = np.zeros(m_true, dtype=np.int64)
-            seg = counts[:max(0, min(len(counts), m_true - off))]
-            out[off:off + len(seg)] = seg
-            return out
+        if pipelined:
+            rows = int(tiles[0][1].shape[0])
+            m_pad = rows * len(tiles)
 
-        job = MapReduceJob(
-            name=name,
-            map_fn=tile_counts,
-            combine_fn=lambda a, b: a + b,   # disjoint segments: order-free
-            zero_fn=lambda m=m_true: np.zeros(m, dtype=np.int64),
-            cost_fn=lambda t: float(t[1].nbytes + t[2].nbytes),
-        )
+            def map_fn(tile):
+                off, Aj, Bj = tile
+                return (jnp.zeros(m_pad, jnp.int32)
+                        .at[off:off + rows]
+                        .set(self._count(Aj, Bj).astype(jnp.int32)))
+
+            def finalize(acc):
+                out = meter.d2h(acc[:m_true], dtype=np.int64)
+                self.slabs.give(acc)
+                return out
+
+            job = MapReduceJob(
+                name=name,
+                map_fn=map_fn,
+                combine_fn=donated_add,
+                zero_fn=lambda: self.slabs.take((m_pad,), jnp.int32),
+                cost_fn=lambda t: float(t[1].nbytes + t[2].nbytes),
+            )
+        else:
+            finalize = None
+
+            def tile_counts(tile) -> np.ndarray:
+                off, Aj, Bj = tile
+                counts = meter.d2h(self._count(Aj, Bj), dtype=np.int64)
+                out = np.zeros(m_true, dtype=np.int64)
+                seg = counts[:max(0, min(len(counts), m_true - off))]
+                out[off:off + len(seg)] = seg
+                return out
+
+            job = MapReduceJob(
+                name=name,
+                map_fn=tile_counts,
+                combine_fn=lambda a, b: a + b,  # disjoint segments
+                zero_fn=lambda m=m_true: np.zeros(m, dtype=np.int64),
+                cost_fn=lambda t: float(t[1].nbytes + t[2].nbytes),
+            )
         tile_costs = np.array([job.tile_cost(t) for t in tiles],
                               dtype=np.float64)
         tile_rows = np.array([t[1].shape[0] for t in tiles], dtype=np.float64)
@@ -172,6 +207,8 @@ class EclatMiner:
             result, rep = self.cluster.run(job, tiles, failures=failures,
                                            speculate=self.config.speculate,
                                            assignment=asg)
+            if finalize is not None:
+                result = finalize(result)   # the round's single sync
             return MeasuredPhase(result=result, busy_s=rep.busy_s,
                                  makespan=rep.makespan,
                                  switches=rep.switches, reissued=rep.reissued,
@@ -208,7 +245,7 @@ class EclatMiner:
             min_speed=cfg.serial_min_speed)
         min_sup = cfg.abs_support(n_tx_raw)
         n_words = cols.shape[1]
-        cols = jnp.asarray(cols)                 # device-resident once
+        cols = rt.meter.h2d(cols)                # device-resident once
 
         report = PipelineReport(
             backend=self.backend, policy=rt.policy.name,
@@ -250,8 +287,8 @@ class EclatMiner:
             left = np.array([row_of[c[:-1]] for c in cands], dtype=np.int32)
             right = np.array([row_of[c[:-2] + (c[-1],)] for c in cands],
                              dtype=np.int32)
-            A = jnp.take(slab, jnp.asarray(left), axis=0)
-            B = jnp.take(slab, jnp.asarray(right), axis=0)
+            A = jnp.take(slab, rt.meter.h2d(left), axis=0)
+            B = jnp.take(slab, rt.meter.h2d(right), axis=0)
 
             sup, rec = self._map_round(f"eclat-round{k}-intersect",
                                        A, B, len(cands), failures)
@@ -266,8 +303,11 @@ class EclatMiner:
             # (uncharged staging, like the horizontal plane's
             # itemsets_to_bitmap + prepare)
             if frequent:
-                surv = jnp.asarray(np.array(surv_rows, dtype=np.int32))
-                slab = jnp.take(A, surv, axis=0) & jnp.take(B, surv, axis=0)
+                surv = rt.meter.h2d(np.array(surv_rows, dtype=np.int32))
+                # donated AND: the two gathered parent slabs die here, so
+                # the survivor tidsets are written in place of one of them
+                slab = donated_and(jnp.take(A, surv, axis=0),
+                                   jnp.take(B, surv, axis=0))
                 row_of = {c: r for r, c in enumerate(frequent)}
             m_padded = -(-len(cands) // 128) * 128
             report.rounds.append(RoundReport.from_phases(

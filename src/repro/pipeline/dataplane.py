@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.kernels.support_count.ops import support_count as _pallas_count
 from repro.kernels.support_count.ref import support_count_ref as _ref_count
+from repro.runtime.transfers import METER, TransferMeter
 
 _jitted_ref = jax.jit(_ref_count)
 
@@ -76,7 +77,8 @@ class DataPlane:
     """
 
     def __init__(self, kind: str = "auto", m_bucket: int = 128,
-                 interpret: Optional[bool] = None, tuning=None):
+                 interpret: Optional[bool] = None, tuning=None,
+                 meter: Optional[TransferMeter] = None):
         if m_bucket <= 0 or m_bucket % 128:
             raise ValueError(
                 "m_bucket must be a positive multiple of 128 (kernel lanes)")
@@ -86,6 +88,9 @@ class DataPlane:
         # None = the checked-in autotune cache picks variant + tiles;
         # False = roofline defaults; dict/AutotuneCache pin the choice
         self.tuning = tuning
+        # all boundary crossings this plane makes are metered, so the
+        # owning Runtime's ledger can attribute them per phase
+        self.meter = meter if meter is not None else METER
         self._C: Optional[jnp.ndarray] = None
         self._m_true = 0
 
@@ -97,15 +102,39 @@ class DataPlane:
     def prepare(self, C: np.ndarray) -> None:
         """Stage a level's candidate bitmap (padded to the bucket shape)."""
         self._m_true = C.shape[0]
-        self._C = jnp.asarray(pad_candidates(C, self.m_bucket))
+        self._C = self.meter.h2d(pad_candidates(C, self.m_bucket))
+
+    def prepare_device(self, C: jnp.ndarray) -> None:
+        """Stage an already-device-resident candidate bitmap (the
+        pipelined path: padding rows are zeroed, so no re-pad and no
+        transfer — the generator built it in place)."""
+        if C.shape[0] % self.m_bucket:
+            raise ValueError(
+                f"device candidate bitmap rows {C.shape[0]} not a multiple "
+                f"of m_bucket={self.m_bucket}")
+        self._m_true = int(C.shape[0])
+        self._C = C
+
+    def _counts(self, tile) -> jnp.ndarray:
+        Tj = self.meter.h2d(tile)
+        if self.backend == "pallas":
+            return _pallas_count(Tj, self._C, interpret=self.interpret,
+                                 tuning=self.tuning)
+        return _jitted_ref(Tj, self._C)
 
     def tile_counts(self, tile: np.ndarray) -> np.ndarray:
-        """Support counts [m_true] int64 for one transaction tile."""
+        """Support counts [m_true] int64 for one transaction tile.
+
+        The per-tile readback is a device sync: launches serialize on it,
+        which is exactly what ``round_execution="per_tile"`` measures.
+        """
         assert self._C is not None, "prepare() before tile_counts()"
-        Tj = jnp.asarray(tile)
-        if self.backend == "pallas":
-            out = _pallas_count(Tj, self._C, interpret=self.interpret,
-                                tuning=self.tuning)
-        else:
-            out = _jitted_ref(Tj, self._C)
-        return np.asarray(out[:self._m_true], dtype=np.int64)
+        return self.meter.d2h(self._counts(tile)[:self._m_true],
+                              dtype=np.int64)
+
+    def tile_counts_device(self, tile) -> jnp.ndarray:
+        """Device-resident counts [m_padded] int32 for one tile — no slice,
+        no readback, no sync: the pipelined round combines these on device
+        and reads one packed vector back at round close."""
+        assert self._C is not None, "prepare() before tile_counts_device()"
+        return self._counts(tile)

@@ -42,9 +42,10 @@ from repro.core.rules import Rule, generate_rules
 from repro.data.baskets import pack_transactions, pad_items
 from repro.data.sparse import SparseSlab
 from repro.pipeline.dataplane import DataPlane, uniform_tiles
+from repro.pipeline.devgen import DeviceLattice
 from repro.pipeline.report import PipelineReport, RoundReport
-from repro.runtime import (MeasuredPhase, Runtime, SwitchingPolicy,
-                           autotuned_costmodel)
+from repro.runtime import (MeasuredPhase, Runtime, SlabPool, SwitchingPolicy,
+                           autotuned_costmodel, donated_add)
 
 Baskets = Union[np.ndarray, SparseSlab, Sequence[Sequence[int]]]
 
@@ -90,6 +91,12 @@ class PipelineConfig:
     # model picks per dataset from measured density/sparsity features —
     # see repro.mining.select).  All backends are pinned bit-identical.
     algorithm: str = "apriori"
+    # Round execution: "pipelined" (default) dispatches every tile kernel
+    # eagerly, folds partial counts into a donated device accumulator and
+    # reads back one packed vector per round (single sync point; candidate
+    # generation stays on device — see repro.pipeline.devgen).  "per_tile"
+    # is the legacy sync-per-tile path, kept as the B13 A/B baseline.
+    round_execution: str = "pipelined"
     n_tiles: int = 32
     policy: str = "static"          # switching: static | dynamic | costmodel
     split: str = "lpt"              # tile split: equal | proportional | lpt
@@ -172,10 +179,17 @@ class MarketBasketPipeline:
         self.power = self.runtime.power
         self.cluster = SimulatedCluster(self.profile, self.scheduler,
                                         power=None)  # ledger prices energy
+        if cfg.round_execution not in ("pipelined", "per_tile"):
+            raise ValueError(
+                f"unknown round_execution {cfg.round_execution!r} "
+                "(expected 'pipelined' or 'per_tile')")
         self.data_plane = DataPlane(cfg.data_plane,
                                     m_bucket=cfg.m_bucket,
                                     interpret=cfg.interpret,
-                                    tuning=None if cfg.autotune else False)
+                                    tuning=None if cfg.autotune else False,
+                                    meter=self.runtime.meter)
+        # round-persistent donated count accumulators, keyed by bucket shape
+        self.slabs = SlabPool()
 
     # ------------------------------------------------------------------
     # phases
@@ -186,10 +200,14 @@ class MarketBasketPipeline:
 
     def _map_round(self, job: MapReduceJob, tiles: List,
                    failures: Optional[List[FailureEvent]],
-                   tile_flops: Optional[np.ndarray] = None):
+                   tile_flops: Optional[np.ndarray] = None,
+                   finalize=None):
         """One tiled map phase through the shared runtime: the policy plans
         the assignment, the simulated cluster executes it, the runtime does
-        the time/energy/switch accounting exactly once."""
+        the time/energy/switch accounting exactly once.  ``finalize`` runs
+        on the combined result *inside* the phase — the pipelined path's
+        single d2h readback happens there, so the sync lands on this
+        phase's ledger record, not the next one's."""
         tile_costs = np.array([job.tile_cost(t) for t in tiles],
                               dtype=np.float64)
         # one family: every round maps the same device-resident tiles, so
@@ -201,6 +219,8 @@ class MarketBasketPipeline:
             result, rep = self.cluster.run(job, tiles, failures=failures,
                                            speculate=self.config.speculate,
                                            assignment=asg)
+            if finalize is not None:
+                result = finalize(result)
             return MeasuredPhase(result=result, busy_s=rep.busy_s,
                                  makespan=rep.makespan,
                                  switches=rep.switches, reissued=rep.reissued,
@@ -213,6 +233,16 @@ class MarketBasketPipeline:
     # ------------------------------------------------------------------
     def run(self, baskets: Baskets,
             failures: Optional[List[FailureEvent]] = None) -> PipelineResult:
+        if self.config.round_execution == "pipelined":
+            return self._run_pipelined(baskets, failures)
+        return self._run_per_tile(baskets, failures)
+
+    # ------------------------------------------------------------------
+    # legacy sync-per-tile rounds — the B13 A/B baseline
+    # ------------------------------------------------------------------
+    def _run_per_tile(self, baskets: Baskets,
+                      failures: Optional[List[FailureEvent]] = None
+                      ) -> PipelineResult:
         cfg = self.config
         rt = self.runtime
         t_start = time.perf_counter()
@@ -227,7 +257,7 @@ class MarketBasketPipeline:
         min_sup = cfg.abs_support(n_tx_raw)
         # device-resident once: every round's map phase reuses these tiles,
         # so uploading per round would redo the same host->device transfers
-        tiles = [jnp.asarray(t) for t in uniform_tiles(T, cfg.n_tiles)]
+        tiles = [rt.meter.h2d(t) for t in uniform_tiles(T, cfg.n_tiles)]
         tile_rows = np.array([t.shape[0] for t in tiles], dtype=np.float64)
 
         report = PipelineReport(
@@ -242,7 +272,9 @@ class MarketBasketPipeline:
         job1 = MapReduceJob(
             name="mba-round1-item-counts",
             # sum on device, transfer n_items ints — not the whole tile back
-            map_fn=lambda tile: np.asarray(
+            # (still one readback *per tile*: that sync is this path's
+            # defining cost, which the pipelined path removes)
+            map_fn=lambda tile: rt.meter.d2h(
                 tile.sum(axis=0, dtype=jnp.int32), dtype=np.int64),
             combine_fn=lambda a, b: a + b,
             zero_fn=lambda: np.zeros(n_items, dtype=np.int64),
@@ -298,6 +330,126 @@ class MarketBasketPipeline:
             fn=lambda: generate_rules(
                 AprioriResult(supports=supports, n_tx=n_tx_raw, levels=k - 1),
                 cfg.min_confidence, min_lift=cfg.min_lift),
+            min_speed=cfg.serial_min_speed)
+        report.rules_phase = rules_rec
+
+        report.n_itemsets = len(supports)
+        report.n_rules = len(rules)
+        report.wall_time_s = time.perf_counter() - t_start
+        report.ledger = rt.ledger.take_since(mark)
+        return PipelineResult(supports=supports, rules=rules, report=report,
+                              n_tx=n_tx_raw)
+
+    # ------------------------------------------------------------------
+    # pipelined device-resident rounds (the default)
+    # ------------------------------------------------------------------
+    def _run_pipelined(self, baskets: Baskets,
+                       failures: Optional[List[FailureEvent]] = None
+                       ) -> PipelineResult:
+        """Same mining semantics as :meth:`_run_per_tile`, with rounds held
+        on device: all tile kernels of a round dispatch eagerly (nothing in
+        the map fan-out synchronizes), partial counts fold into a donated
+        slab accumulator, candidate generation for the next level runs as a
+        jitted join on the compacted frequent matrix, and the only
+        device→host crossing per counting round is one packed
+        ``[m_cap + 1]`` vector (counts + next join size) read inside the
+        map phase.  Itemset tuples reach the host once, at rule time."""
+        cfg = self.config
+        rt = self.runtime
+        t_start = time.perf_counter()
+        rt.ledger.take_since(0)
+        mark = rt.ledger.mark()
+
+        T, n_items_raw, n_tx_raw = self._ingest(baskets)
+        n_tx, n_items = T.shape                     # lane-padded (internal)
+        min_sup = cfg.abs_support(n_tx_raw)
+        tiles = [rt.meter.h2d(t) for t in uniform_tiles(T, cfg.n_tiles)]
+        tile_rows = np.array([t.shape[0] for t in tiles], dtype=np.float64)
+
+        report = PipelineReport(
+            backend=self.data_plane.backend, policy=rt.policy.name,
+            split=rt.split,
+            profile_speeds=[float(s) for s in self.profile.speeds],
+            n_tx=n_tx_raw, n_items=n_items_raw,
+            n_tiles=len(tiles), min_support=min_sup)
+        supports: Dict[Tuple[int, ...], int] = {}
+        lattice = DeviceLattice(n_items, m_bucket=cfg.m_bucket,
+                                meter=rt.meter)
+
+        # ---- round k=1: item frequency, one readback ------------------
+        job1 = MapReduceJob(
+            name="mba-round1-item-counts",
+            map_fn=lambda tile: tile.sum(axis=0, dtype=jnp.int32),
+            combine_fn=donated_add,
+            zero_fn=lambda: jnp.zeros(n_items, jnp.int32),
+        )
+        counts, rec = self._map_round(
+            job1, tiles, failures, tile_flops=tile_rows * n_items,
+            finalize=lambda acc: rt.meter.d2h(acc, dtype=np.int64))
+        frequent_items = np.nonzero(counts >= min_sup)[0]
+        for i in frequent_items:
+            supports[(int(i),)] = int(counts[i])
+        report.rounds.append(RoundReport.from_phases(
+            k=1, n_candidates=n_items_raw, n_frequent=len(frequent_items),
+            map_phase=rec))
+        f_count = len(frequent_items)
+        if f_count:
+            # seeded between phases, so the (tiny) upload is attributed to
+            # the phase that consumes it — the k=2 candgen
+            lattice.seed_items(frequent_items)
+
+        # ---- rounds k>=2: device candgen + device-combined counting ---
+        k = 2
+        while f_count and (cfg.max_k == 0 or k <= cfg.max_k):
+            gen, serial = rt.run_serial(
+                f"mba-candgen-k{k}",
+                cost=candgen_cost(f_count, k, cfg.serial_unit_cost),
+                fn=lattice.join,
+                min_speed=cfg.serial_min_speed)
+            if gen is None:
+                report.rounds.append(RoundReport.from_phases(
+                    k=k, n_candidates=0, n_frequent=0, map_phase=None,
+                    serial=serial, n_devices=self.profile.n))
+                break
+            C, valid_c, bitmap, m_cap = gen
+            self.data_plane.prepare_device(bitmap)
+            job = MapReduceJob(
+                name=f"mba-round{k}-support",
+                map_fn=self.data_plane.tile_counts_device,
+                combine_fn=donated_add,
+                zero_fn=lambda m=m_cap: self.slabs.take((m,), jnp.int32),
+            )
+
+            def finalize(acc, C=C, valid_c=valid_c):
+                packed, Fn, vn = lattice.finalize(acc, C, valid_c, min_sup)
+                host = rt.meter.d2h(packed)    # the round's single sync
+                self.slabs.give(acc)           # accumulator back to the pool
+                return host, Fn, vn
+
+            (packed, Fn, vn), rec = self._map_round(
+                job, tiles, failures,
+                tile_flops=support_flops(tile_rows, n_items, m_cap),
+                finalize=finalize)
+            m_true, f_count = lattice.advance(packed, Fn, vn, min_sup)
+            report.rounds.append(RoundReport.from_phases(
+                k=k, n_candidates=m_true, n_frequent=f_count,
+                map_phase=rec, serial=serial, m_padded=m_cap))
+            k += 1
+
+        # ---- step 3: rules — tuples decode here, once -----------------
+        n_supports = len(supports) + lattice.n_frequent_total
+
+        def rules_fn():
+            supports.update(lattice.decode_supports())
+            return generate_rules(
+                AprioriResult(supports=supports, n_tx=n_tx_raw,
+                              levels=k - 1),
+                cfg.min_confidence, min_lift=cfg.min_lift)
+
+        rules, rules_rec = rt.run_serial(
+            "mba-rules",
+            cost=max(1.0, n_supports * cfg.serial_unit_cost),
+            fn=rules_fn,
             min_speed=cfg.serial_min_speed)
         report.rules_phase = rules_rec
 

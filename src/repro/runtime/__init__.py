@@ -1,6 +1,8 @@
 """Shared scheduling runtime: one MBScheduler + PowerModel + phase ledger
 behind every execution plane, with pluggable static/dynamic/costmodel
 switching policies (paper §VI)."""
+from repro.runtime.donation import (SlabPool, donated_add, donated_and,
+                                    donated_jit, donation_supported)
 from repro.runtime.ledger import ExecLedger, PhaseRecord
 from repro.runtime.policies import (POLICY_NAMES, CostModelPolicy,
                                     DynamicPolicy, StaticPolicy,
@@ -8,10 +10,13 @@ from repro.runtime.policies import (POLICY_NAMES, CostModelPolicy,
                                     resolve_policy)
 from repro.runtime.report import LedgerTotals, PlaneReport
 from repro.runtime.runtime import MeasuredPhase, Runtime, resolve_power
+from repro.runtime.transfers import METER, TransferMeter, TransferStats
 
 __all__ = [
-    "POLICY_NAMES", "CostModelPolicy", "DynamicPolicy", "ExecLedger",
-    "LedgerTotals", "MeasuredPhase", "PhaseRecord", "PlaneReport",
-    "Runtime", "StaticPolicy", "SwitchingPolicy", "autotuned_costmodel",
-    "resolve_policy", "resolve_power",
+    "METER", "POLICY_NAMES", "CostModelPolicy", "DynamicPolicy",
+    "ExecLedger", "LedgerTotals", "MeasuredPhase", "PhaseRecord",
+    "PlaneReport", "Runtime", "SlabPool", "StaticPolicy", "SwitchingPolicy",
+    "TransferMeter", "TransferStats", "autotuned_costmodel", "donated_add",
+    "donated_and", "donated_jit", "donation_supported", "resolve_policy",
+    "resolve_power",
 ]

@@ -1,0 +1,72 @@
+"""Donated-buffer jit helpers — round-persistent slabs without realloc.
+
+``jax.jit(..., donate_argnums=...)`` lets XLA alias a dead input buffer to
+an output of the same shape/dtype, so a per-tile count accumulator or a
+per-round candidate slab is *updated in place* instead of reallocated.
+Donation is a backend capability: TPU and GPU alias; CPU ignores the
+donation and warns per call.  :func:`donated_jit` therefore compiles with
+donation only where the backend honors it — semantics are identical either
+way (donation is purely an allocation optimization), and the CPU CI legs
+stay warning-free.
+
+:class:`SlabPool` keeps one device slab per (shape, dtype) bucket across
+rounds: levels whose candidate counts land in the same ``m_bucket`` reuse
+the same buffer, which together with ``donate_argnums`` removes the
+per-round allocate + H2D of the padded candidate matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_DONATING_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def donation_supported() -> bool:
+    """True when the default backend honors input-output buffer aliasing."""
+    return jax.default_backend() in _DONATING_BACKENDS
+
+
+def donated_jit(fn, *, donate_argnums=(), **jit_kwargs):
+    """``jax.jit`` that donates only on backends that alias (no CPU spam)."""
+    if donation_supported():
+        return jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+    return jax.jit(fn, **jit_kwargs)
+
+
+# The round accumulator combiner: ``acc`` is dead after the add, so its
+# buffer is reused for the running sum on donation-capable backends.  Every
+# tile's partial counts fold into the same persistent buffer, and because
+# nothing here synchronizes, all tile kernels of a round dispatch eagerly.
+donated_add = donated_jit(lambda acc, x: acc + x, donate_argnums=(0,))
+
+# In-place survivor intersection (the Eclat plane's next-level slab): both
+# gathered parent slabs are dead after the AND, so the result aliases one.
+donated_and = donated_jit(lambda a, b: a & b, donate_argnums=(0, 1))
+
+
+class SlabPool:
+    """Round-persistent device slabs keyed by bucket shape.
+
+    ``take(shape, dtype)`` returns a zeroed slab, reusing (and donating)
+    the previous round's buffer when the bucket shape repeats — the common
+    case under ``m_bucket`` rounding, where consecutive Apriori levels
+    share a padded candidate shape.
+    """
+
+    def __init__(self) -> None:
+        self._slabs: Dict[Tuple[Tuple[int, ...], str], jnp.ndarray] = {}
+        self._zero = donated_jit(lambda s: s * 0, donate_argnums=(0,))
+
+    def take(self, shape: Tuple[int, ...], dtype) -> jnp.ndarray:
+        key = (tuple(shape), jnp.dtype(dtype).name)
+        slab = self._slabs.pop(key, None)
+        if slab is None:
+            return jnp.zeros(shape, dtype)
+        return self._zero(slab)
+
+    def give(self, slab: jnp.ndarray) -> None:
+        """Return a slab to the pool once the round no longer reads it."""
+        self._slabs[(tuple(slab.shape), jnp.dtype(slab.dtype).name)] = slab

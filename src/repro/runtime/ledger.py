@@ -57,6 +57,13 @@ class PhaseRecord:
     tiles_done: List[int] = field(default_factory=list)
     failed_devices: List[int] = field(default_factory=list)
     constraint_violated: bool = False
+    # host/device data movement attributed to this phase (metered by the
+    # Runtime's TransferMeter; staging between phases lands on the phase
+    # that consumes it).  ``syncs`` counts device->host synchronization
+    # points — the pipelined round contract is exactly 1 per map round.
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    syncs: int = 0
 
 
 @dataclass
@@ -111,6 +118,18 @@ class ExecLedger:
     def total_reissued(self) -> int:
         return sum(p.reissued for p in self.phases)
 
+    @property
+    def total_h2d_bytes(self) -> int:
+        return sum(p.h2d_bytes for p in self.phases)
+
+    @property
+    def total_d2h_bytes(self) -> int:
+        return sum(p.d2h_bytes for p in self.phases)
+
+    @property
+    def total_syncs(self) -> int:
+        return sum(p.syncs for p in self.phases)
+
     def constraint_violations(self) -> List[PhaseRecord]:
         return [p for p in self.phases if p.constraint_violated]
 
@@ -119,4 +138,6 @@ class ExecLedger:
                 f"{self.total_time_s:.4f}s, {self.total_energy_j:.1f}J, "
                 f"{self.total_switches} switches, "
                 f"{self.total_reissued} re-issues, "
-                f"{len(self.constraint_violations())} constraint violations")
+                f"{len(self.constraint_violations())} constraint violations | "
+                f"{self.total_h2d_bytes}B h2d, {self.total_d2h_bytes}B d2h, "
+                f"{self.total_syncs} syncs")

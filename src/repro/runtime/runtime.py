@@ -30,6 +30,7 @@ from repro.core.power import PowerModel
 from repro.core.scheduler import Assignment, MBScheduler, TaskSpec
 from repro.runtime.ledger import ExecLedger, PhaseRecord
 from repro.runtime.policies import SwitchingPolicy, resolve_policy
+from repro.runtime.transfers import TransferMeter
 
 
 @dataclass
@@ -47,6 +48,12 @@ class MeasuredPhase:
     work_done: Optional[np.ndarray] = None  # [n] executed work units (feeds
     #                                         DynamicPolicy's EWMA loop)
     wall_s: float = 0.0                    # measured host wall
+    # transfers the executor measured *outside* the runtime's meter (e.g.
+    # a shard_map barrier counted as one sync); added on top of the meter
+    # delta when the phase is recorded
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    syncs: int = 0
 
 
 def resolve_power(power: Union[str, PowerModel, None],
@@ -71,12 +78,23 @@ class Runtime:
                  split: str = "lpt",
                  power: Union[str, PowerModel, None] = "cpu",
                  scheduler: Optional[MBScheduler] = None,
-                 ledger: Optional[ExecLedger] = None):
+                 ledger: Optional[ExecLedger] = None,
+                 meter: Optional[TransferMeter] = None):
         self.profile = profile
         self.scheduler = scheduler or MBScheduler(profile, policy=split)
         self.policy = resolve_policy(policy)
         self.power = resolve_power(power, profile)
         self.ledger = ledger if ledger is not None else ExecLedger()
+        # per-runtime transfer meter: every phase record absorbs whatever
+        # crossed the host/device boundary since the previous phase ended,
+        # so inter-phase staging (tile uploads) lands on its consumer
+        self.meter = meter if meter is not None else TransferMeter()
+        self._transfer_mark = self.meter.stats()
+
+    def _take_transfers(self):
+        delta = self.meter.since(self._transfer_mark)
+        self._transfer_mark = self.meter.stats()
+        return delta
 
     @property
     def split(self) -> str:
@@ -114,13 +132,16 @@ class Runtime:
         busy[dev] = sim_t
         if self.power is not None:
             energy = self.power.energy(busy, sim_t, gated=asg.gated)
+        xfer = self._take_transfers()
         rec = self.ledger.add(PhaseRecord(
             name=name, kind=kind, policy=self.policy.name,
             cost_source=getattr(self.policy, "cost_source", "bytes"),
             cost=cost,
             sim_time_s=sim_t, host_time_s=host_t, energy_j=energy,
             busy_s=[float(b) for b in busy], gated=list(asg.gated),
-            device=dev, constraint_violated=asg.constraint_violated))
+            device=dev, constraint_violated=asg.constraint_violated,
+            h2d_bytes=xfer.h2d_bytes, d2h_bytes=xfer.d2h_bytes,
+            syncs=xfer.syncs))
         return result, rec
 
     # ------------------------------------------------------------------
@@ -191,6 +212,7 @@ class Runtime:
                     energy += (self.power.p_gated[d]
                                - self.power.p_idle[d]) * tail
 
+        xfer = self._take_transfers()
         rec = self.ledger.add(PhaseRecord(
             name=task.name, kind="map", policy=self.policy.name,
             cost_source=getattr(self.policy, "cost_source", "bytes"),
@@ -202,7 +224,10 @@ class Runtime:
             tiles_done=(list(measured.tiles_done)
                         if measured.tiles_done is not None
                         else [len(ts) for ts in asg.tiles_of]),
-            failed_devices=list(measured.failed_devices)))
+            failed_devices=list(measured.failed_devices),
+            h2d_bytes=xfer.h2d_bytes + measured.h2d_bytes,
+            d2h_bytes=xfer.d2h_bytes + measured.d2h_bytes,
+            syncs=xfer.syncs + measured.syncs))
         return measured.result, rec
 
     # ------------------------------------------------------------------

@@ -54,10 +54,10 @@ class Query:
     canonicalizes it exactly as before; ``Query`` adds identity (``rid``)
     and arrival time so a request can be tracked through the open loop.
 
-    .. deprecated:: the old positional form — passing a bare list/array
-       straight to ``serve()``/``submit()`` — still works (it is coerced
-       through :meth:`of`), but new callers should construct ``Query``
-       objects or dicts so the request id travels with the request.
+    ``serve()``/``submit()`` accept only ``Query`` objects and dicts —
+    the old positional form (a bare list/array straight to the server)
+    was removed; wrap such payloads explicitly with :meth:`of`, which
+    remains the one constructor for every accepted shape.
     """
 
     payload: Any

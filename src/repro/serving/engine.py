@@ -57,9 +57,10 @@ from repro.serving.admission import Handle, Query
 from repro.serving.cache import Recommendation, ResultCache
 from repro.serving.index import RuleIndex
 
-# Any accepted request form: a Query object, a dict with an "items" key,
-# a plain item-id sequence, or a 0/1 bitmap row (the legacy alias).
-QueryLike = Union[Query, Dict, np.ndarray, Sequence[int]]
+# Any accepted request form: a Query object or a dict with an "items" key.
+# Bare item-id sequences / bitmap rows must be wrapped through Query.of —
+# the positional raw-basket form was removed from serve()/submit().
+QueryLike = Union[Query, Dict]
 
 
 @dataclass(frozen=True)

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections.abc import Mapping
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
@@ -218,11 +219,17 @@ class AsyncServer:
     def submit(self, query, arrival_s: Optional[float] = None) -> Handle:
         """Enqueue one request; returns its :class:`Handle` immediately.
 
-        Accepts every ``Query.of`` form.  ``arrival_s`` defaults to the
-        server clock's *now* (live traffic); replay callers pass explicit
-        non-decreasing arrivals.  Validation (id range, bitmap form)
-        happens here, so a malformed request fails its caller at submit
-        instead of poisoning the drain loop."""
+        Accepts :class:`Query` objects and ``{"items": ...}`` dicts.
+        ``arrival_s`` defaults to the server clock's *now* (live
+        traffic); replay callers pass explicit non-decreasing arrivals.
+        Validation (id range, bitmap form) happens here, so a malformed
+        request fails its caller at submit instead of poisoning the
+        drain loop."""
+        if not isinstance(query, (Query, Mapping)):
+            raise TypeError(
+                f"submit()/serve() take Query objects or dicts, not bare "
+                f"{type(query).__name__} payloads — wrap the basket with "
+                f"Query.of(...)")
         q = Query.of(query, arrival_s=arrival_s)
         bits = self.engine._as_bits(q.payload)
         with self._submit_lock:

@@ -62,8 +62,8 @@ from repro.core.scheduler import MBScheduler, TaskSpec
 from repro.pipeline.dataplane import DataPlane, uniform_tiles
 from repro.pipeline.pipeline import (PipelineConfig, candgen_cost,
                                      support_flops)
-from repro.runtime import (ExecLedger, MeasuredPhase, Runtime,
-                           SwitchingPolicy, autotuned_costmodel)
+from repro.runtime import (ExecLedger, MeasuredPhase, Runtime, SlabPool,
+                           SwitchingPolicy, autotuned_costmodel, donated_add)
 from repro.serving.engine import RecommendationEngine
 from repro.serving.index import RuleIndex
 from repro.streaming.source import SlidingWindow
@@ -93,6 +93,7 @@ class StreamingConfig:
     min_lift: float = 0.0
     max_k: int = 0                  # 0 = mine until no candidates survive
     n_tiles: int = 8                # validation-pass map tiles
+    round_execution: str = "pipelined"  # pipelined | per_tile (see PipelineConfig)
     policy: str = "static"          # switching: static | dynamic | costmodel
     split: str = "lpt"              # tile split: equal | proportional | lpt
     data_plane: str = "auto"        # auto | pallas | ref
@@ -113,7 +114,9 @@ class StreamingConfig:
         kw = dict(min_support=self.min_support,
                   min_confidence=self.min_confidence,
                   min_lift=self.min_lift, max_k=self.max_k,
-                  n_tiles=self.n_tiles, policy=self.policy, split=self.split,
+                  n_tiles=self.n_tiles,
+                  round_execution=self.round_execution,
+                  policy=self.policy, split=self.split,
                   data_plane=self.data_plane, m_bucket=self.m_bucket,
                   interpret=self.interpret, autotune=self.autotune,
                   power=self.power,
@@ -244,6 +247,10 @@ class StreamingMiner:
         self.profile = profile or HeterogeneityProfile.paper()
         self.config = config or StreamingConfig()
         cfg = self.config
+        if cfg.round_execution not in ("pipelined", "per_tile"):
+            raise ValueError(
+                f"round_execution must be 'pipelined' or 'per_tile', "
+                f"got {cfg.round_execution!r}")
         policy = policy if policy is not None else cfg.policy
         if policy == "costmodel" and cfg.autotune:
             # measured kernel walls replace the datasheet constants
@@ -257,7 +264,9 @@ class StreamingMiner:
         self.scheduler = self.runtime.scheduler
         self.data_plane = DataPlane(cfg.data_plane, m_bucket=cfg.m_bucket,
                                     interpret=cfg.interpret,
-                                    tuning=None if cfg.autotune else False)
+                                    tuning=None if cfg.autotune else False,
+                                    meter=self.runtime.meter)
+        self.slabs = SlabPool()
         self.window = SlidingWindow(cfg.window, n_items)
         self.engine = engine
 
@@ -328,16 +337,37 @@ class StreamingMiner:
                         float(tile_costs.sum()), parallel=True,
                         n_tiles=len(slabs), family="stream-delta")
 
+        meter = self.runtime.meter
+        pipelined = self.config.round_execution == "pipelined"
+
         def execute(_asg, _costs):
-            d_items = (arrived.sum(axis=0, dtype=np.int64)
-                       - evicted.sum(axis=0, dtype=np.int64))
-            d_supp = np.zeros(len(self._tracked), dtype=np.int64)
-            if self._tracked:
-                if arrived.shape[0]:
-                    d_supp += self.data_plane.tile_counts(arrived)
-                if evicted.shape[0]:
-                    d_supp -= self.data_plane.tile_counts(evicted)
-            return MeasuredPhase(result=(d_items, d_supp))
+            if not pipelined:           # legacy: host math + per-slab syncs
+                d_items = (arrived.sum(axis=0, dtype=np.int64)
+                           - evicted.sum(axis=0, dtype=np.int64))
+                d_supp = np.zeros(len(self._tracked), dtype=np.int64)
+                if self._tracked:
+                    if arrived.shape[0]:
+                        d_supp += self.data_plane.tile_counts(arrived)
+                    if evicted.shape[0]:
+                        d_supp -= self.data_plane.tile_counts(evicted)
+                return MeasuredPhase(result=(d_items, d_supp))
+            # pipelined: both slabs' item deltas and tracked-support deltas
+            # compute on device; one packed [Ip + m] readback is the batch's
+            # single sync point
+            m = len(self._tracked)
+            d_items = jnp.zeros(Ip, jnp.int32)
+            d_supp = jnp.zeros(m, jnp.int32)
+            for sign, slab in ((1, arrived), (-1, evicted)):
+                if not slab.shape[0]:
+                    continue
+                dev = meter.h2d(slab)
+                d_items = d_items + sign * dev.sum(axis=0, dtype=jnp.int32)
+                if m:
+                    d_supp = (d_supp + sign
+                              * self.data_plane.tile_counts_device(dev)[:m])
+            packed = meter.d2h(jnp.concatenate([d_items, d_supp]),
+                               dtype=np.int64)
+            return MeasuredPhase(result=(packed[:Ip], packed[Ip:]))
 
         (d_items, d_supp), rec = self.runtime.run_phase(
             task, execute, tile_costs=tile_costs,
@@ -356,7 +386,9 @@ class StreamingMiner:
         min_sup = self.min_support_abs()
         Ip = self.window.n_items_padded
         W = self.window.rows()
-        tiles = [jnp.asarray(t) for t in uniform_tiles(W, cfg.n_tiles)]
+        meter = self.runtime.meter
+        pipelined = cfg.round_execution == "pipelined"
+        tiles = [meter.h2d(t) for t in uniform_tiles(W, cfg.n_tiles)]
         tile_rows = np.array([t.shape[0] for t in tiles], dtype=np.float64)
 
         frequent: List[Itemset] = [
@@ -384,7 +416,16 @@ class StreamingMiner:
                             parallel=True, n_tiles=len(tiles),
                             family="stream-validate")
 
-            def execute(_asg, _costs, tiles=tiles, m=len(cands)):
+            def execute(_asg, _costs, tiles=tiles, m=len(cands),
+                        m_pad=m_padded):
+                if pipelined:   # donated device accumulate, one sync/level
+                    acc = self.slabs.take((m_pad,), jnp.int32)
+                    for t in tiles:
+                        acc = donated_add(
+                            acc, self.data_plane.tile_counts_device(t))
+                    counts = meter.d2h(acc[:m], dtype=np.int64)
+                    self.slabs.give(acc)
+                    return MeasuredPhase(result=counts)
                 counts = np.zeros(m, dtype=np.int64)
                 for t in tiles:
                     counts += self.data_plane.tile_counts(t)

@@ -38,7 +38,7 @@ def make_engine(res, policy="static", buckets=(1, 8, 64), cache_size=0,
 
 
 def queries_of(T, n):
-    return [list(np.nonzero(row)[0]) for row in T[:n]]
+    return [Query.of(list(np.nonzero(row)[0])) for row in T[:n]]
 
 
 def handle_of(rid, arrival_s, n_items=8):
@@ -234,7 +234,7 @@ def test_async_matches_closed_loop_and_oracle_under_both_policies(mined):
     qs = queries_of(T, 48)
     rng = np.random.default_rng(11)
     arrivals = np.cumsum(rng.exponential(0.05, size=48))
-    oracle = [recommend_bruteforce(res.rules, q, 5) for q in qs]
+    oracle = [recommend_bruteforce(res.rules, q.payload, 5) for q in qs]
     for policy in ("static", "dynamic"):
         closed, crep = make_engine(res, policy=policy).serve(qs, arrivals)
         engine = make_engine(res, policy=policy)
@@ -274,9 +274,9 @@ def test_engine_submit_poll_drain_surface(mined):
     T, res = mined
     engine = make_engine(res, cache_size=64)
     q = queries_of(T, 1)[0]
-    h = engine.submit({"items": q, "id": 99})
+    h = engine.submit({"items": q.payload, "id": 99})
     assert h.rid == 99
-    want = recommend_bruteforce(res.rules, q, 5)
+    want = recommend_bruteforce(res.rules, q.payload, 5)
     assert engine.poll(h) == want
     h2 = engine.submit(q)                     # server-assigned rid moves on
     assert h2.rid > 99

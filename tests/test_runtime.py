@@ -278,7 +278,7 @@ def test_ledger_slices_isolate_runs():
 def test_serving_engine_ledger_does_not_grow_across_calls():
     from repro.data.baskets import BasketConfig, generate_baskets
     from repro.pipeline import MarketBasketPipeline, PipelineConfig
-    from repro.serving import (RecommendationEngine, RuleIndex,
+    from repro.serving import (Query, RecommendationEngine, RuleIndex,
                                ServingConfig)
     T = generate_baskets(BasketConfig(n_tx=400, n_items=24, seed=2))
     res = MarketBasketPipeline(
@@ -288,7 +288,7 @@ def test_serving_engine_ledger_does_not_grow_across_calls():
         RuleIndex.build(res.rules, T.shape[1]),
         config=ServingConfig(k=3, batch_buckets=(8,), data_plane="ref",
                              cache_size=0))
-    queries = [list(np.nonzero(row)[0]) for row in T[:16]]
+    queries = [Query.of(list(np.nonzero(row)[0])) for row in T[:16]]
     _, rep1 = engine.serve(queries)
     _, rep2 = engine.serve(queries)
     assert rep1.ledger.n_phases > 0 and rep2.ledger.n_phases > 0

@@ -12,8 +12,8 @@ from repro.data.baskets import BasketConfig, generate_baskets
 from repro.kernels.rule_match.ops import rule_topk
 from repro.kernels.rule_match.ref import recommend_ref
 from repro.pipeline import MarketBasketPipeline, PipelineConfig
-from repro.serving import (RecommendationEngine, RuleIndex, ServingConfig,
-                           recommend_bruteforce)
+from repro.serving import (Query, RecommendationEngine, RuleIndex,
+                           ServingConfig, recommend_bruteforce)
 
 
 @pytest.fixture(scope="module")
@@ -30,7 +30,7 @@ def mined():
 
 
 def queries_of(T, n):
-    return [list(np.nonzero(row)[0]) for row in T[:n]]
+    return [Query.of(list(np.nonzero(row)[0])) for row in T[:n]]
 
 
 # ---------------------------------------------------------------------------
@@ -93,10 +93,10 @@ def test_engine_matches_bruteforce_oracle(mined):
     results, report = engine.serve(queries)
     assert report.n_queries == len(queries)
     for q, got in zip(queries, results):
-        assert got == recommend_bruteforce(res.rules, q, 4)
+        assert got == recommend_bruteforce(res.rules, q.payload, 4)
         assert len(got) <= 4
         for item, score in got:
-            assert item not in q and score > 0
+            assert item not in q.payload and score > 0
 
 
 def test_engine_pallas_and_ref_planes_agree(mined):
@@ -120,17 +120,21 @@ def test_engine_accepts_bitmap_and_id_list_queries(mined):
     engine = RecommendationEngine(RuleIndex.build(res.rules, T.shape[1]),
                                   config=ServingConfig(k=3,
                                                        data_plane="ref"))
-    from_rows, _ = engine.serve(list(T[:10]))
+    from_rows, _ = engine.serve([Query.of(row) for row in T[:10]])
     from_ids, _ = engine.serve(queries_of(T, 10))
     assert from_rows == from_ids
     with pytest.raises(ValueError):
-        engine.recommend([T.shape[1] + 5])          # id out of range
+        engine.recommend(Query.of([T.shape[1] + 5]))    # id out of range
     with pytest.raises(ValueError):
-        engine.serve([np.full(T.shape[1], 2, np.uint8)])  # counts, not bits
+        engine.serve([Query.of(np.full(T.shape[1], 2, np.uint8))])
     padded = np.zeros(engine.index.n_items_padded, np.uint8)
     padded[engine.index.n_items + 1] = 1            # bit in the lane padding
     with pytest.raises(ValueError):
-        engine.serve([padded])
+        engine.serve([Query.of(padded)])
+    with pytest.raises(TypeError):
+        engine.serve([list(np.nonzero(T[0])[0])])   # bare payload: removed
+    with pytest.raises(TypeError):
+        engine.submit(T[0])                         # bare bitmap row: removed
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +222,7 @@ def test_index_rejects_bad_inputs(mined):
     assert empty.n_rows == 0 and empty.n_rows_padded == 128
     engine = RecommendationEngine(empty, config=ServingConfig(
         k=3, data_plane="ref"))
-    assert engine.recommend([0, 1]) == []
+    assert engine.recommend(Query.of([0, 1])) == []
 
 
 # ---------------------------------------------------------------------------

@@ -119,7 +119,8 @@ def test_stream_refresh_serve_closed_loop_dynamic():
                              cache_size=256))
     miner = StreamingMiner(n_items, config=cfg, engine=engine)
 
-    query = list(range(6))                  # covers items of several rules
+    from repro.serving import Query
+    query = Query.of(list(range(6)))        # covers items of several rules
     versions, serve_reports = [], []
     for batch in TransactionStream(T, cfg.batch_size):
         miner.process_batch(batch)
@@ -128,7 +129,7 @@ def test_stream_refresh_serve_closed_loop_dynamic():
         serve_reports.append(srep)
         # no stale read: what we got is exactly what the *current* rules
         # imply — a cache entry surviving a refresh would violate this
-        assert got[0] == recommend_bruteforce(miner.rules, query, 3)
+        assert got[0] == recommend_bruteforce(miner.rules, query.payload, 3)
         # serving the same query twice without a refresh must hit the LRU:
         # no miss, hence no scoring map phase (admission still runs)
         _, srep2 = engine.serve([query])
@@ -196,7 +197,7 @@ def test_min_speed_violation_reaches_pipeline_report():
 def test_min_speed_violation_reaches_serving_report():
     from repro.data.baskets import BasketConfig, generate_baskets
     from repro.pipeline import MarketBasketPipeline, PipelineConfig
-    from repro.serving import (RecommendationEngine, RuleIndex,
+    from repro.serving import (Query, RecommendationEngine, RuleIndex,
                                ServingConfig)
     T = generate_baskets(BasketConfig(n_tx=400, n_items=24, seed=2))
     res = MarketBasketPipeline(config=PipelineConfig(
@@ -206,7 +207,7 @@ def test_min_speed_violation_reaches_serving_report():
         index, config=ServingConfig(k=3, batch_buckets=(8,),
                                     data_plane="ref", cache_size=0,
                                     admission_min_speed=1e6))
-    queries = [list(np.nonzero(row)[0]) for row in T[:16]]
+    queries = [Query.of(list(np.nonzero(row)[0])) for row in T[:16]]
     _, rep = engine.serve(queries)
     assert rep.constraint_violations == rep.n_batches > 0
     assert "WARNING" in rep.summary() and "min_speed" in rep.summary()
