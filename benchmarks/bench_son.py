@@ -1,0 +1,91 @@
+"""B14 — SON out-of-core two-pass mining.
+
+Two claims, two row families:
+
+* ``son_ntx{N}_wall`` — wall clock vs corpus size at a *fixed* device-
+  memory budget (``partition_rows`` held constant, so the partition count
+  grows with the corpus).  SON's work per partition is constant here, so
+  the wall should scale ~linearly in N — the derived column carries the
+  partition count, and the per-row transfer columns carry the ledger's
+  h2d/d2h/sync totals so checkpoint + spill I/O stays visible.
+
+* ``son_outofcore_wall`` vs ``son_incore_wall`` — the overhead of the
+  two-pass plane on a corpus that *fits* in core, against the single-shot
+  pipeline on the same data.  Gated in baselines.json with an
+  ``auto_within`` rule: spill + two passes + boundary checkpoints may
+  cost at most the configured factor over in-core — the price of crash
+  safety, bounded.
+
+Every timed SON run starts from a clean workdir (spill included), so the
+measured wall is the full out-of-core protocol, not a warm-cache replay.
+"""
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.baskets import BasketConfig, generate_baskets
+from repro.mining import SONConfig, SONMiner
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+
+PARTITION_ROWS = 1024
+SIZES = (2048, 4096, 8192)
+REPS = 3
+
+
+def _config():
+    return PipelineConfig(min_support=0.03, n_tiles=16)
+
+
+def _son_run(T, workdir):
+    miner = SONMiner(profile=HeterogeneityProfile.paper(), config=_config(),
+                     son=SONConfig(workdir=workdir,
+                                   partition_rows=PARTITION_ROWS))
+    return miner.run(T)
+
+
+def run(csv_rows):
+    corpora = {n: generate_baskets(BasketConfig(n_tx=n, n_items=64, seed=13))
+               for n in SIZES}
+    root = tempfile.mkdtemp(prefix="bench-son-")
+    try:
+        # warm the jit caches once (kernel compiles are not SON's story)
+        _son_run(corpora[SIZES[0]], f"{root}/warm")
+
+        # ---- wall vs corpus size at fixed memory budget ----------------
+        for n, T in corpora.items():
+            walls, report = [], None
+            for r in range(REPS):
+                wd = f"{root}/n{n}-r{r}"
+                t0 = time.perf_counter()
+                res = _son_run(T, wd)
+                walls.append((time.perf_counter() - t0) * 1e6)
+                report = res.report
+            led = report.ledger
+            csv_rows.append((f"son_ntx{n}_wall", float(np.median(walls)),
+                             report.n_partitions, led.total_h2d_bytes,
+                             led.total_d2h_bytes, led.total_syncs))
+
+        # ---- SON overhead vs in-core on a fitting corpus ---------------
+        T = corpora[SIZES[0]]
+        pipe = MarketBasketPipeline(HeterogeneityProfile.paper(), _config())
+        pipe.run(T)                      # warm
+        son_walls, in_walls = [], []
+        son_res = in_res = None
+        for r in range(REPS):
+            t0 = time.perf_counter()
+            son_res = _son_run(T, f"{root}/oc-r{r}")
+            son_walls.append((time.perf_counter() - t0) * 1e6)
+            t0 = time.perf_counter()
+            in_res = pipe.run(T)
+            in_walls.append((time.perf_counter() - t0) * 1e6)
+        assert son_res.supports == in_res.supports, \
+            "out-of-core diverged from in-core — bench refuses to time " \
+            "wrong answers"
+        csv_rows.append(("son_outofcore_wall", float(np.median(son_walls)),
+                         son_res.report.n_partitions))
+        csv_rows.append(("son_incore_wall", float(np.median(in_walls)), 1))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)

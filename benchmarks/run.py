@@ -29,6 +29,11 @@
                              (async dispatch, donated slabs, on-device
                              candgen, one d2h per round) vs per-tile-sync
                              (the pipelined-strictly-faster gate)
+  B14 bench_son            — SON out-of-core two-pass mining (wall vs
+                             corpus size at a fixed partition_rows
+                             memory budget; out-of-core overhead vs the
+                             in-core pipeline on a fitting corpus — the
+                             bounded-overhead gate)
 
 Run: ``PYTHONPATH=src python -m benchmarks.run [--only B2]``
 
@@ -51,7 +56,7 @@ from benchmarks import (bench_algorithms, bench_apriori,
                         bench_async_serving, bench_kernels, bench_pipeline,
                         bench_policies, bench_power, bench_roofline,
                         bench_round_exec, bench_scheduler, bench_serving,
-                        bench_sharded_mining, bench_streaming)
+                        bench_sharded_mining, bench_son, bench_streaming)
 
 SUITES = {
     "B1": ("apriori", bench_apriori.run),
@@ -67,6 +72,7 @@ SUITES = {
     "B11": ("algorithms", bench_algorithms.run),
     "B12": ("async_serving", bench_async_serving.run),
     "B13": ("round_exec", bench_round_exec.run),
+    "B14": ("son", bench_son.run),
 }
 
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
@@ -188,7 +194,7 @@ def main() -> None:
             failed.append(sid)
             print(f"# {sid} {name} failed: {e}", file=sys.stderr)
     # rows are (name, us, derived) or, for transfer-instrumented suites
-    # (B6/B8/B13), (name, us, derived, h2d_bytes, d2h_bytes, syncs); the
+    # (B6/B8/B13/B14), (name, us, derived, h2d_bytes, d2h_bytes, syncs); the
     # CSV always carries the transfer columns (zeros when unmeasured)
     print("name,us_per_call,derived,h2d_bytes,d2h_bytes,syncs")
     for row in rows:

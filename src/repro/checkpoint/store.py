@@ -9,6 +9,15 @@ Layout:
     arrays.msgpack.zst       # flat {key: bytes} (or arrays.msgpack, raw)
   <dir>/LATEST               # atomically-updated pointer (two-phase commit)
 
+Crash-safety contract (what the SON resume path leans on): at every point
+during ``save`` there is a complete checkpoint on disk that ``restore``
+can open.  The commit sequence is write-to-``.tmp`` → rename the old step
+aside to ``.old`` → rename ``.tmp`` into place → flip LATEST → delete
+``.old``; a crash in any window leaves either the old step (possibly under
+its ``.old`` name, recovered transparently on read) or the new one.  Stale
+``.tmp``/``.old`` dirs from a crashed save are wiped on the next write,
+never reused.
+
 Restore is mesh-agnostic: arrays come back as numpy and are re-sharded by
 ``device_put`` against whatever mesh the restoring job runs (elastic resize
 — the paper's "switch off cores" — is therefore free at the checkpoint
@@ -20,7 +29,7 @@ import json
 import os
 import shutil
 import tempfile
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import msgpack
 import numpy as np
@@ -63,8 +72,21 @@ def _flatten(tree: Any):
     return flat, jax.tree_util.tree_structure(tree)
 
 
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:09d}")
+
+
+def _is_complete(step_dir: str) -> bool:
+    """The manifest is written last inside the tmp dir, so its presence
+    marks a fully-written checkpoint."""
+    return os.path.isfile(os.path.join(step_dir, "manifest.json"))
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
-         codec: Optional[str] = None) -> str:
+         codec: Optional[str] = None, keep_last: Optional[int] = None) -> str:
+    """Write one checkpoint; some complete checkpoint survives a crash at
+    any point.  ``keep_last=N`` prunes all but the newest N steps after the
+    commit (the step LATEST points at is never pruned)."""
     if codec is None:
         codec = "zstd" if HAVE_ZSTD else "raw"
     if codec not in _CODEC_FILES:
@@ -72,9 +94,23 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
     if codec == "zstd" and not HAVE_ZSTD:
         raise ImportError("codec='zstd' requires the 'zstandard' package")
     flat, _ = _flatten(tree)
-    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    step_dir = _step_dir(ckpt_dir, step)
     tmp = step_dir + ".tmp"
-    os.makedirs(tmp, exist_ok=True)
+    old = step_dir + ".old"
+    # a crashed save may have left a stale .tmp (half-written payloads —
+    # reusing it mixes files across codecs) or a stale .old (already
+    # superseded, or about to be recovered by the read below); at the start
+    # of a new save neither is load-bearing, so wipe both
+    if os.path.isdir(step_dir) and not _is_complete(step_dir):
+        # crashed mid-commit: the half-renamed dir is garbage, the intact
+        # old step (if any) is still under .old — put it back first
+        shutil.rmtree(step_dir)
+        if _is_complete(old):
+            os.rename(old, step_dir)
+    for stale in (tmp, old):
+        if os.path.exists(stale):
+            shutil.rmtree(stale)
+    os.makedirs(tmp)
 
     manifest = {"step": step, "extra": extra or {}, "codec": codec,
                 "arrays": {}}
@@ -94,35 +130,102 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[Dict] = None,
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
 
-    # two-phase commit: rename dir, then flip LATEST
-    if os.path.exists(step_dir):
-        shutil.rmtree(step_dir)
+    # commit: rename the old step ASIDE (never delete-then-rename — a crash
+    # in that window would leave LATEST pointing at nothing), move the new
+    # dir into place, flip LATEST, and only then drop the old step
+    have_old = os.path.exists(step_dir)
+    if have_old:
+        os.rename(step_dir, old)
     os.rename(tmp, step_dir)
     latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(os.path.basename(step_dir))
     os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    if have_old:
+        shutil.rmtree(old)
+    if keep_last is not None:
+        _prune(ckpt_dir, keep_last)
     return step_dir
 
 
+def _prune(ckpt_dir: str, keep_last: int) -> None:
+    keep_last = max(1, int(keep_last))
+    present = steps_present(ckpt_dir)
+    latest = latest_step(ckpt_dir)
+    for s in present[:-keep_last]:
+        if s == latest:          # never prune the committed pointer target
+            continue
+        for suffix in ("", ".old"):
+            d = _step_dir(ckpt_dir, s) + suffix
+            if os.path.exists(d):
+                shutil.rmtree(d)
+
+
+def steps_present(ckpt_dir: str) -> List[int]:
+    """Steps with a complete checkpoint on disk — including steps only
+    reachable through a crashed save's ``.old`` dir (recovered on read)."""
+    steps = set()
+    if not os.path.isdir(ckpt_dir):
+        return []
+    for name in os.listdir(ckpt_dir):
+        stem = name[:-4] if name.endswith(".old") else name
+        if not (stem.startswith("step_") and stem[5:].isdigit()):
+            continue
+        if _is_complete(os.path.join(ckpt_dir, name)):
+            steps.add(int(stem[5:]))
+    return sorted(steps)
+
+
+def _resolve_step_dir(ckpt_dir: str, step: int) -> Optional[str]:
+    """Directory of a complete checkpoint for ``step``, recovering from a
+    save that crashed between rename-aside and commit; None if absent."""
+    d = _step_dir(ckpt_dir, step)
+    if _is_complete(d):
+        return d
+    old = d + ".old"
+    if _is_complete(old):
+        # crash window: the new dir never landed (or landed half-written)
+        # but the previous checkpoint is intact under .old — restore it to
+        # its real name so LATEST and future saves see a normal store
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(old, d)
+        return d
+    return None
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """The newest restorable step.  A LATEST pointer whose directory was
+    deleted (or never committed) is not trusted — fall back to the newest
+    complete checkpoint actually on disk."""
     p = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return int(f.read().strip().split("_")[-1])
+    present = steps_present(ckpt_dir)
+    if os.path.exists(p):
+        with open(p) as f:
+            step = int(f.read().strip().split("_")[-1])
+        if step in present:
+            return step
+    return present[-1] if present else None
 
 
-def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
-            shardings: Any = None) -> Tuple[Any, Dict]:
-    """Restore into the structure of `like` (shapes validated).  If
-    `shardings` (matching pytree of NamedSharding) is given, arrays are
-    device_put with them — the elastic re-shard path."""
+def _missing_step_error(ckpt_dir: str, step: Optional[int]) -> FileNotFoundError:
+    present = steps_present(ckpt_dir)
+    have = ", ".join(str(s) for s in present) if present else "none"
+    what = "no checkpoint" if step is None else f"checkpoint step {step} not"
+    return FileNotFoundError(
+        f"{what} found under {ckpt_dir} (steps present: {have})")
+
+
+def _read_payload(ckpt_dir: str, step: Optional[int]
+                  ) -> Tuple[Dict, Dict[str, bytes], int]:
+    """Resolve + validate a step, returning (manifest, payload, step)."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
-    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+            raise _missing_step_error(ckpt_dir, None)
+    step_dir = _resolve_step_dir(ckpt_dir, step)
+    if step_dir is None:
+        raise _missing_step_error(ckpt_dir, step)
     with open(os.path.join(step_dir, "manifest.json")) as f:
         manifest = json.load(f)
     codec = manifest.get("codec", "zstd")   # pre-codec checkpoints were zstd
@@ -130,16 +233,41 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
         raise ValueError(f"checkpoint {step_dir} uses unknown codec {codec!r}")
     with open(os.path.join(step_dir, _CODEC_FILES[codec]), "rb") as f:
         payload = msgpack.unpackb(_decode(f.read(), codec))
+    return manifest, payload, step
+
+
+def _as_array(meta: Dict, raw: bytes) -> np.ndarray:
+    arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
+    if meta["orig_dtype"] == "bfloat16":
+        arr = arr.view(jnp.bfloat16)
+    return arr
+
+
+def load_arrays(ckpt_dir: str, step: Optional[int] = None
+                ) -> Tuple[Dict[str, np.ndarray], Dict]:
+    """Restore a checkpoint as a flat ``{key: writable numpy array}`` plus
+    its extra dict, with no ``like`` tree — the resume path for state whose
+    shapes are only known from the checkpoint itself (SON's per-level
+    candidate arrays grow between boundaries)."""
+    manifest, payload, _ = _read_payload(ckpt_dir, step)
+    out = {}
+    for key, meta in manifest["arrays"].items():
+        out[key] = _as_array(meta, payload[key]).copy()   # writable
+    return out, manifest["extra"]
+
+
+def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of `like` (shapes validated).  If
+    `shardings` (matching pytree of NamedSharding) is given, arrays are
+    device_put with them — the elastic re-shard path."""
+    manifest, payload, _ = _read_payload(ckpt_dir, step)
 
     flat_like, _ = _flatten(like)
     flat_shard, _ = _flatten(shardings) if shardings is not None else ({}, None)
     out = {}
     for key, leaf in flat_like.items():
-        meta = manifest["arrays"][key]
-        raw = payload[key]
-        arr = np.frombuffer(raw, dtype=meta["dtype"]).reshape(meta["shape"])
-        if meta["orig_dtype"] == "bfloat16":
-            arr = arr.view(jnp.bfloat16)
+        arr = _as_array(manifest["arrays"][key], payload[key])
         assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
         if key in flat_shard:
             out[key] = jax.device_put(arr, flat_shard[key])

@@ -86,6 +86,26 @@ def mesh_profile(n: int,
                                 ewma_alpha=base.ewma_alpha)
 
 
+def partition_miner(mesh: Optional[Mesh] = None,
+                    config: Optional[PipelineConfig] = None,
+                    base_profile: Optional[HeterogeneityProfile] = None,
+                    policy: Union[str, "SwitchingPolicy", None] = None,
+                    row_block: int = 8,
+                    verify_rounds: bool = False) -> "ShardedMiner":
+    """Per-partition entry point for the SON out-of-core plane: one
+    :class:`ShardedMiner` sized to ``mesh`` (profile cycled from
+    ``base_profile``) that the SON driver reuses across every partition
+    sharing a local config — so the compiled shard_map programs and the
+    shard planner's jit caches are built once, not once per partition.
+    ``config.algorithm`` must already be resolved (SON decides ``auto``
+    once, globally, before the first partition)."""
+    mesh = mesh if mesh is not None else make_shard_mesh()
+    n = mesh.shape[mesh.axis_names[0]]
+    return ShardedMiner(mesh=mesh, profile=mesh_profile(n, base_profile),
+                        config=config, policy=policy, row_block=row_block,
+                        verify_rounds=verify_rounds)
+
+
 # ---------------------------------------------------------------------------
 # shard planning
 # ---------------------------------------------------------------------------

@@ -27,11 +27,21 @@ and rules — the CI multi-device end-to-end check (run under both
 the switching policy, and with ``--algorithm eclat|auto`` the reference
 pipeline is the Apriori oracle, so the cross-algorithm parity is asserted
 too).
+
+`--out-of-core` runs the SON two-pass plane: the corpus is spilled to
+disk-resident chunks of `--partition-rows` transactions under `--son-dir`,
+mined partition-locally, then globally re-counted — with a resumable
+checkpoint at every partition boundary.  A killed mine (`--kill-after N`
+simulates one, exiting 3) restarts with `--resume` from the last completed
+partition and finishes bit-identical to an uninterrupted run; the
+`--smoke` oracle assert is the proof, and the CI kill-and-resume smoke
+drives exactly that sequence.
 """
 from __future__ import annotations
 
 import contextlib
 import os
+import tempfile
 
 from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
 from repro.data.sparse import SparseSlab
@@ -56,9 +66,13 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
          n_shards: int = 0, smoke: bool = False, policy: str = "static",
          autotune: bool = True, algorithm: str = "apriori",
          dataset: str = "dense", round_execution: str = "pipelined",
-         profile_dir: str = ""):
+         profile_dir: str = "", out_of_core: bool = False,
+         partition_rows: int = 4096, son_dir: str = "", resume: bool = False,
+         kill_after: int = 0):
     if smoke:                       # CI-sized: parity is the point, not scale
         n_tx, n_items = min(n_tx, 2048), min(n_items, 64)
+        if out_of_core:             # at least 4 partitions, so the two-pass
+            partition_rows = min(partition_rows, max(256, n_tx // 4))
 
     T = _make_dataset(dataset, n_tx, n_items, seed)
     config = PipelineConfig(min_support=min_support,
@@ -76,7 +90,33 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
     else:
         trace_ctx = contextlib.nullcontext()
 
-    if sharded:
+    if out_of_core:
+        from repro.mining import SONConfig, SONKilled, SONMiner, make_miner
+        workdir = son_dir or os.path.join(tempfile.gettempdir(),
+                                          f"repro-son-{seed}")
+        son = SONConfig(workdir=workdir, partition_rows=partition_rows,
+                        resume=resume, abort_after=kill_after or None)
+        profile = PROFILES[profile_name]()
+        print(f"[mine] out-of-core: {partition_rows} rows/partition "
+              f"workdir={workdir} resume={resume} policy={policy} "
+              f"algorithm={algorithm}" + (" sharded" if sharded else ""))
+        if sharded:
+            # per-partition local pass on a real device mesh
+            from repro.distributed.mining import make_shard_mesh
+            miner = SONMiner(profile=profile, config=config, son=son,
+                             mesh=make_shard_mesh(n_shards or None))
+        else:
+            miner, _ = make_miner(T, profile=profile, config=config, son=son)
+        try:
+            with trace_ctx:
+                result = miner.run(T)
+        except SONKilled as e:
+            print(f"[mine] killed at partition boundary {e.boundary} "
+                  f"(checkpoint saved under {workdir}) — rerun with "
+                  "--resume to finish")
+            raise SystemExit(3)
+        choice = miner.algorithm_choice
+    elif sharded:
         from repro.distributed.mining import (ShardedMiner, make_shard_mesh,
                                               mesh_profile)
         mesh = make_shard_mesh(n_shards or None)
@@ -106,11 +146,12 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
     for r in result.rules[:top]:
         print("   ", r)
 
-    if smoke and (sharded or algorithm != "apriori"):
+    if smoke and (sharded or out_of_core or algorithm != "apriori"):
         # end-to-end cross-plane AND cross-algorithm check: whatever ran
-        # (sharded, eclat, auto) must equal the single-device Apriori
-        # oracle bit for bit — scheduling and formulation must never
-        # change what gets mined, only when/where/how it runs
+        # (sharded, out-of-core, eclat, auto) must equal the single-device
+        # Apriori oracle bit for bit — scheduling, partitioning and
+        # formulation must never change what gets mined, only
+        # when/where/how it runs
         oracle_cfg = PipelineConfig(
             min_support=min_support, min_confidence=min_confidence,
             n_tiles=n_tiles, policy=policy, split=split,
@@ -121,7 +162,9 @@ def mine(n_tx: int = 8192, n_items: int = 128, min_support: float = 0.02,
             "mined itemsets differ from the single-device Apriori oracle"
         assert result.rules == single.rules, \
             "mined rules differ from the single-device Apriori oracle"
-        ran = result.report.algorithm + (" sharded" if sharded else "")
+        ran = result.report.algorithm + (" sharded" if sharded else "") \
+            + (" out-of-core" if out_of_core else "") \
+            + (" resumed" if resume else "")
         print(f"[mine] smoke OK: {ran} == single-device apriori "
               f"({len(result.supports)} itemsets, {len(result.rules)} rules, "
               f"policy={policy})")
@@ -155,8 +198,27 @@ def main():
                     help="mesh ranks (default: all visible devices)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: small data, per-round invariant checks, "
-                         "and (with --sharded / --algorithm eclat|auto) "
-                         "single-device Apriori parity assert")
+                         "and (with --sharded / --out-of-core / "
+                         "--algorithm eclat|auto) single-device Apriori "
+                         "parity assert")
+    ap.add_argument("--out-of-core", action="store_true",
+                    help="SON two-pass plane: spill the corpus to disk "
+                         "chunks, mine partition-locally, re-count "
+                         "globally — checkpointed at every boundary")
+    ap.add_argument("--partition-rows", type=int, default=4096,
+                    help="transactions per disk-resident SON chunk (the "
+                         "device-memory budget)")
+    ap.add_argument("--son-dir", default="",
+                    help="SON workdir for spill chunks + checkpoints "
+                         "(default: a per-seed dir under the system tmp)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed out-of-core mine from its last "
+                         "completed partition boundary (bit-identical to "
+                         "an uninterrupted run)")
+    ap.add_argument("--kill-after", type=int, default=0,
+                    help="test hook: abort the out-of-core mine after N "
+                         "partition boundaries (exit code 3, checkpoint "
+                         "kept — the CI kill-and-resume smoke)")
     args = ap.parse_args()
     if args.sharded and "XLA_FLAGS" not in os.environ:
         # default in a multi-device mesh for the CLI only — XLA reads this
@@ -169,7 +231,9 @@ def main():
          policy=args.policy, autotune=args.autotune,
          algorithm=args.algorithm, dataset=args.dataset,
          round_execution=args.round_execution,
-         profile_dir=args.profile_dir)
+         profile_dir=args.profile_dir, out_of_core=args.out_of_core,
+         partition_rows=args.partition_rows, son_dir=args.son_dir,
+         resume=args.resume, kill_after=args.kill_after)
 
 
 if __name__ == "__main__":

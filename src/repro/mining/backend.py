@@ -51,6 +51,7 @@ def make_miner(baskets: Baskets,
                config: Optional[PipelineConfig] = None,
                policy: Union[str, SwitchingPolicy, None] = None,
                model: Optional[AlgorithmCostModel] = None,
+               son=None,
                ) -> Tuple[MiningBackend, Optional[AlgorithmChoice]]:
     """Resolve ``config.algorithm`` to a ready miner.
 
@@ -61,9 +62,20 @@ def make_miner(baskets: Baskets,
     :class:`AlgorithmChoice` carries the full evidence trail (``None``
     when the algorithm was explicit).  ``model`` lets tests script the
     rates.
+
+    ``son`` (a :class:`repro.mining.son.SONConfig`) routes to the
+    out-of-core two-pass :class:`repro.mining.son.SONMiner` instead — the
+    algorithm (including ``auto``, re-priced on the partition-sized
+    problem) resolves per run inside the miner, so the choice is returned
+    as ``None`` here and surfaced as ``miner.algorithm_choice`` after
+    ``run()``.
     """
     config = config or PipelineConfig()
     algorithm = resolve_algorithm(config.algorithm)
+    if son is not None:
+        from repro.mining.son import SONMiner
+        return SONMiner(profile=profile, config=config, son=son,
+                        policy=policy), None
     choice: Optional[AlgorithmChoice] = None
     if algorithm == "auto":
         # min_support resolves against the true tx count in every input

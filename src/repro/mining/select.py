@@ -143,3 +143,56 @@ def select_algorithm(baskets: BasketsLike, min_sup_abs: int,
         stats = density_stats(baskets)
     model = model or AlgorithmCostModel.from_autotune()
     return model.estimate(stats, min_sup_abs)
+
+
+# ---------------------------------------------------------------------------
+# SON out-of-core partition scaling
+# ---------------------------------------------------------------------------
+
+def local_min_support(min_sup_abs: int, partition_rows: int, n_tx: int) -> int:
+    """SON's per-partition absolute threshold: ``floor(G * p / n)``, clamped
+    to >= 1.  The *floor* is load-bearing: if an itemset misses this bound
+    in every partition, its global count is strictly below
+    ``sum_p floor(G * p_rows / n) <= G`` — so no globally frequent itemset
+    can be absent from every local result (SON's no-false-negative
+    guarantee, the property the bit-identity tests pin)."""
+    if n_tx <= 0:
+        return 1
+    return max(1, (min_sup_abs * partition_rows) // n_tx)
+
+
+def partition_stats(stats: DensityStats, partition_rows: int) -> DensityStats:
+    """Corpus-level density stats scaled down to one SON partition.
+
+    Item frequencies scale ~linearly with rows for the synthetic and retail
+    corpora in tree (items are iid across transactions), so the partition's
+    feature vector is the corpus's at ``partition_rows / n_tx``.  Using the
+    same scaled stats for *every* partition keeps the auto-selection a
+    single global decision — one formulation, one jit-cache family, and a
+    resume that cannot flip algorithms mid-mine."""
+    rows = max(1, min(int(partition_rows), stats.n_tx or 1))
+    frac = rows / stats.n_tx if stats.n_tx else 0.0
+    counts = np.floor(stats.item_counts.astype(np.float64) * frac
+                      ).astype(np.int64)
+    nnz = int(counts.sum())
+    cells = rows * stats.n_items
+    return DensityStats(
+        n_tx=rows, n_items=stats.n_items, nnz=nnz,
+        density=nnz / cells if cells else 0.0,
+        item_counts=counts,
+        max_item_frequency=(float(counts.max()) / rows
+                            if rows and stats.n_items else 0.0))
+
+
+def select_partition_algorithm(stats: DensityStats, partition_rows: int,
+                               min_sup_abs: int,
+                               model: Optional[AlgorithmCostModel] = None
+                               ) -> AlgorithmChoice:
+    """Auto-selection for the SON plane: price both formulations on the
+    *partition-sized* problem (that is where the map rounds actually run)
+    at the partition-scaled local threshold, and pick once for all
+    partitions."""
+    ps = partition_stats(stats, partition_rows)
+    model = model or AlgorithmCostModel.from_autotune()
+    return model.estimate(ps, local_min_support(min_sup_abs, ps.n_tx,
+                                                stats.n_tx))

@@ -95,10 +95,16 @@ class PipelineReport:
     wall_time_s: float = 0.0      # host wall clock for the whole run
     ledger: Optional[ExecLedger] = None   # this run's phase records
     # distributed mining plane (execution == "sharded"):
-    execution: str = "simulated"  # "simulated" | "sharded"
+    execution: str = "simulated"  # "simulated" | "sharded" | "out_of_core"
     n_shards: int = 0             # mesh axis size (0 = single-device plane)
     shard_rows: List[int] = field(default_factory=list)  # final plan, per rank
     replans: int = 0              # failure-triggered shard re-plans
+    # out-of-core SON plane (execution == "out_of_core"):
+    n_partitions: int = 0         # disk-resident chunks the corpus split into
+    partition_rows: int = 0       # configured rows per chunk
+    partitions_resumed: int = 0   # partition passes skipped via checkpoint
+    checkpoint_saves: int = 0     # son_state boundary checkpoints written
+    checkpoint_bytes: int = 0     # total bytes across those saves
 
     # ------------------------------------------------------------------
     @property
@@ -169,6 +175,13 @@ class PipelineReport:
                 f"  sharded: {self.n_shards} mesh ranks, rows/rank "
                 f"{'/'.join(map(str, self.shard_rows))}, "
                 f"{self.replans} re-plans")
+        if self.execution == "out_of_core":
+            lines.append(
+                f"  out-of-core: {self.n_partitions} partitions x "
+                f"{self.partition_rows} rows, "
+                f"{self.partitions_resumed} resumed from checkpoint, "
+                f"{self.checkpoint_saves} checkpoints "
+                f"({self.checkpoint_bytes} B), {self.replans} re-plans")
         lines += [
             f"  data: {self.n_tx} tx x {self.n_items} items, "
             f"{self.n_tiles} tiles, min_support={self.min_support}",

@@ -1,0 +1,281 @@
+"""SON out-of-core plane: bit-identity vs the single-shot pipeline
+(dense + sparse, apriori + eclat, static AND dynamic), kill-at-every-
+partition-boundary resume parity, and the checkpoint-store crash-window
+regressions the resume contract depends on."""
+import dataclasses
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import store
+from repro.core.hetero import HeterogeneityProfile
+from repro.data.baskets import BasketConfig, generate_baskets, sparse_baskets
+from repro.data.sparse import SparseSlab, density_stats
+from repro.mining import (SONConfig, SONKilled, SONMiner, local_min_support,
+                          make_miner, partition_stats)
+from repro.mining.son import partition_slices
+from repro.pipeline import MarketBasketPipeline, PipelineConfig
+
+ROWS = 64          # partition size → 3 partitions on the 192-row corpora
+
+
+def dense_corpus():
+    return generate_baskets(BasketConfig(n_tx=192, n_items=24, seed=1))
+
+
+def sparse_corpus():
+    # item frequencies well above the global threshold used below: SON's
+    # per-partition threshold floor(G * rows / n_tx) must stay >= 2, or
+    # pass 1 degenerates into mining every subset of every transaction
+    # (a real SON failure mode for min_support ~ 1/partition_rows, not a
+    # regime the out-of-core plane targets)
+    return SparseSlab.from_baskets(
+        sparse_baskets(192, 256, seed=2, max_item_freq=0.15), n_items=256)
+
+
+def pipeline_config(algorithm="apriori", policy="static", min_support=0.05):
+    return PipelineConfig(min_support=min_support, algorithm=algorithm,
+                          policy=policy, n_tiles=4)
+
+
+def single_shot(T, cfg):
+    """The oracle: one in-core Apriori pipeline over the whole corpus."""
+    oracle = dataclasses.replace(cfg, algorithm="apriori", policy="static")
+    return MarketBasketPipeline(HeterogeneityProfile.paper(), oracle).run(T)
+
+
+def son_run(T, cfg, workdir, **kw):
+    son = SONConfig(workdir=str(workdir), partition_rows=ROWS, **kw)
+    miner, _ = make_miner(T, config=cfg, son=son)
+    return miner.run(T), miner
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store crash-window regressions
+# ---------------------------------------------------------------------------
+
+def _tree(v=0):
+    return {"a": np.arange(6, dtype=np.int64) + v,
+            "b": np.full((2, 3), float(v), np.float32)}
+
+
+class Boom(RuntimeError):
+    pass
+
+
+def test_save_crash_between_renames_keeps_previous_checkpoint(
+        tmp_path, monkeypatch):
+    """A crash after the old step is renamed aside but before the new dir
+    lands must leave the previous checkpoint restorable (the old code did
+    rmtree-then-rename: that window lost every checkpoint at once)."""
+    d = str(tmp_path)
+    store.save(d, 1, _tree(1), extra={"v": 1}, codec="raw")
+    real_rename = os.rename
+
+    def crashing(src, dst):
+        if src.endswith(".tmp"):        # the commit rename of the new dir
+            raise Boom()
+        return real_rename(src, dst)
+
+    monkeypatch.setattr(store.os, "rename", crashing)
+    with pytest.raises(Boom):
+        store.save(d, 1, _tree(2), extra={"v": 2}, codec="raw")
+    monkeypatch.undo()
+
+    assert store.latest_step(d) == 1
+    restored, extra = store.restore(d, _tree())
+    assert extra["v"] == 1
+    np.testing.assert_array_equal(np.asarray(restored["a"]), _tree(1)["a"])
+    # the next save heals the crashed layout and commits normally
+    store.save(d, 1, _tree(3), extra={"v": 3}, codec="raw")
+    _, extra = store.restore(d, _tree())
+    assert extra["v"] == 3
+    assert not any(n.endswith((".tmp", ".old")) for n in os.listdir(d))
+
+
+def test_stale_tmp_dir_wiped_not_reused(tmp_path):
+    """A leftover .tmp from a crashed save must not leak its files into the
+    next checkpoint (e.g. a stale zstd payload next to a new raw one)."""
+    d = str(tmp_path)
+    tmp = os.path.join(d, "step_000000001.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "arrays.msgpack.zst"), "wb") as f:
+        f.write(b"junk from a crashed zstd attempt")
+    step_dir = store.save(d, 1, _tree(1), codec="raw")
+    assert sorted(os.listdir(step_dir)) == ["arrays.msgpack", "manifest.json"]
+    _, _ = store.restore(d, _tree())
+
+
+def test_keep_last_retention_prunes_oldest(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        store.save(d, s, _tree(s), codec="raw", keep_last=2)
+    assert store.steps_present(d) == [4, 5]
+    assert store.latest_step(d) == 5
+    _, _ = store.restore(d, _tree(), step=4)
+
+
+def test_restore_missing_step_names_requested_and_present(tmp_path):
+    d = str(tmp_path)
+    store.save(d, 2, _tree(2), codec="raw")
+    with pytest.raises(FileNotFoundError) as ei:
+        store.restore(d, _tree(), step=7)
+    assert "7" in str(ei.value) and "2" in str(ei.value)
+    with pytest.raises(FileNotFoundError) as ei:
+        store.restore(str(tmp_path / "empty"), _tree())
+    assert "none" in str(ei.value)
+
+
+def test_latest_step_ignores_dangling_pointer(tmp_path):
+    """latest_step must not report a step whose directory was deleted —
+    fall back to the newest checkpoint actually on disk."""
+    d = str(tmp_path)
+    store.save(d, 1, _tree(1), extra={"v": 1}, codec="raw")
+    store.save(d, 3, _tree(3), codec="raw")
+    shutil.rmtree(os.path.join(d, "step_000000003"))
+    assert store.latest_step(d) == 1
+    _, extra = store.restore(d, _tree())
+    assert extra["v"] == 1
+
+
+# ---------------------------------------------------------------------------
+# SON partition math
+# ---------------------------------------------------------------------------
+
+def test_local_threshold_floor_guarantees_no_false_negatives():
+    # sum of the per-partition floors never exceeds the global threshold:
+    # an itemset below the local bound everywhere is below G globally
+    for n_tx, rows, G in [(192, 64, 10), (1000, 128, 37), (97, 10, 5)]:
+        parts = partition_slices(n_tx, rows)
+        total = sum(local_min_support(G, hi - lo, n_tx) - 1
+                    for lo, hi in parts)
+        assert total < G
+        assert all(local_min_support(G, hi - lo, n_tx) >= 1
+                   for lo, hi in parts)
+
+
+def test_partition_stats_scales_features():
+    stats = density_stats(dense_corpus())
+    ps = partition_stats(stats, 64)
+    assert ps.n_tx == 64 and ps.n_items == stats.n_items
+    assert ps.nnz < stats.nnz
+    np.testing.assert_array_equal(
+        ps.item_counts, (stats.item_counts * (64 / stats.n_tx)).astype(int))
+
+
+# ---------------------------------------------------------------------------
+# bit-identity vs the single-shot pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["static", "dynamic"])
+@pytest.mark.parametrize("dataset,algorithm,min_support", [
+    ("dense", "apriori", 0.05),
+    ("dense", "eclat", 0.05),
+    ("sparse", "apriori", 0.08),
+    ("sparse", "eclat", 0.08),
+])
+def test_son_matches_single_shot(tmp_path, dataset, algorithm, min_support,
+                                 policy):
+    T = dense_corpus() if dataset == "dense" else sparse_corpus()
+    cfg = pipeline_config(algorithm, policy, min_support)
+    oracle = single_shot(T, cfg)
+    assert oracle.supports, "oracle mined nothing — corpus too sparse"
+    result, _ = son_run(T, cfg, tmp_path)
+    assert result.supports == oracle.supports
+    assert result.rules == oracle.rules
+    assert result.report.execution == "out_of_core"
+    assert result.report.n_partitions == len(partition_slices(
+        density_stats(T).n_tx, ROWS))
+    assert result.report.partitions_resumed == 0
+
+
+def test_auto_selects_one_global_algorithm(tmp_path):
+    T = dense_corpus()
+    cfg = pipeline_config("auto")
+    result, miner = son_run(T, cfg, tmp_path)
+    assert miner.algorithm_choice is not None
+    assert result.report.algorithm == miner.algorithm_choice.algorithm
+    oracle = single_shot(T, cfg)
+    assert result.supports == oracle.supports
+    assert result.rules == oracle.rules
+
+
+# ---------------------------------------------------------------------------
+# kill-and-resume
+# ---------------------------------------------------------------------------
+
+def test_kill_at_every_partition_boundary_resumes_bit_identical(tmp_path):
+    T = dense_corpus()
+    cfg = pipeline_config()
+    base, _ = son_run(T, cfg, tmp_path / "base")
+    n_boundaries = 2 * base.report.n_partitions
+    for n in range(1, n_boundaries + 1):
+        wd = tmp_path / f"kill{n}"
+        with pytest.raises(SONKilled) as ei:
+            son_run(T, cfg, wd, abort_after=n)
+        assert ei.value.boundary == n
+        resumed, _ = son_run(T, cfg, wd, resume=True)
+        assert resumed.supports == base.supports, f"kill at boundary {n}"
+        assert resumed.rules == base.rules, f"kill at boundary {n}"
+        assert resumed.report.partitions_resumed == n
+
+
+def test_ledger_prices_every_partition_and_checkpoint(tmp_path):
+    T = dense_corpus()
+    cfg = pipeline_config()
+    result, _ = son_run(T, cfg, tmp_path)
+    P = result.report.n_partitions
+    names = [r.name for r in result.report.ledger.phases]
+    for p in range(P):
+        assert f"son-spill-p{p}" in names             # pass-0 spill write
+        assert names.count(f"son-load-p{p}") == 2     # pass-1 + pass-2 loads
+        assert any(n.startswith(f"son-p{p}/") for n in names)  # local pass
+        assert f"son-recount-p{p}" in names           # global re-count
+    ckpts = [n for n in names if n.startswith("son-ckpt-b")]
+    assert len(ckpts) == 2 * P == result.report.checkpoint_saves
+    assert result.report.checkpoint_bytes > 0
+    assert all(r.sim_time_s > 0 and r.energy_j > 0
+               for r in result.report.ledger.phases)
+    assert "mba-rules" in names
+
+
+def test_resume_rejects_mismatched_job(tmp_path):
+    T = dense_corpus()
+    with pytest.raises(SONKilled):
+        son_run(T, pipeline_config(min_support=0.05), tmp_path, abort_after=2)
+    with pytest.raises(ValueError, match="fingerprint"):
+        son_run(T, pipeline_config(min_support=0.10), tmp_path, resume=True)
+
+
+def test_resume_without_spill_errors(tmp_path):
+    with pytest.raises(FileNotFoundError, match="resume"):
+        son_run(dense_corpus(), pipeline_config(), tmp_path / "nothing",
+                resume=True)
+
+
+# ---------------------------------------------------------------------------
+# sharded local pass + mid-partition device loss (multi-device CI leg)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device mesh (set XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=8)")
+def test_device_loss_mid_partition_triggers_shard_replan(tmp_path):
+    from repro.distributed.fault import FaultEvent, FaultPlan
+    from repro.distributed.mining import make_shard_mesh
+
+    T = dense_corpus()
+    cfg = pipeline_config()
+    miner = SONMiner(config=cfg,
+                     son=SONConfig(workdir=str(tmp_path), partition_rows=ROWS),
+                     mesh=make_shard_mesh())
+    faults = {1: FaultPlan([FaultEvent(2, "device_loss", 1)])}
+    result = miner.run(T, faults)
+    oracle = single_shot(T, cfg)
+    assert result.supports == oracle.supports
+    assert result.rules == oracle.rules
+    assert result.report.replans >= 1
